@@ -1,0 +1,407 @@
+"""Paper-table/figure reproductions (one function per artifact).
+
+All searches are scale-reduced (common.py) but structurally faithful:
+same Algorithm 1, same Table 4 phases, same objectives/aggregations.
+Results land in experiments/paper/*.json; the CSV summary goes to
+stdout via Bench.record.
+
+Known deviation (EXPERIMENTS.md §Fig3): with our analytical cost model
+and a well-converged GA, max-aggregation joint search degenerates to
+largest-workload search (VGG16 dominates every term — visible in the
+paper's own Table 5 EDAP column). Fig3/Fig10 therefore report the
+mean-aggregated joint design, which reproduces the paper's headline
+reductions on the non-largest workloads.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (FOUR_PHASES, Objective, PAPER_4, PAPER_9,
+                        get_space, get_workload_set, joint_search,
+                        make_evaluator, pack)
+from repro.core.nonideal import accuracy_proxy
+from repro.core.objectives import per_workload_scores
+from repro.core.pareto import edap_cost_front
+from repro.core.sampling import random_genomes
+
+from .common import (Bench, G, P_E, P_GA, P_H, eval_design, run_joint,
+                     run_plain, setup)
+
+OUT = "experiments/paper"
+
+
+def _save(name, obj):
+    os.makedirs(OUT, exist_ok=True)
+    with open(os.path.join(OUT, name + ".json"), "w") as f:
+        json.dump(obj, f, indent=1, default=float)
+
+
+def fig3_joint_vs_largest():
+    """Fig. 3: EDAP of joint vs largest-workload designs, RRAM + SRAM."""
+    t0 = time.perf_counter()
+    out = {}
+    for mem in ("rram", "sram"):
+        sp, wa, ev, _, cap = setup(mem)
+        obj = Objective("edap", "mean")
+        joint = run_joint(0, sp, lambda g: obj(ev(g)), cap)
+        spL, waL, evL, sfL, capL = setup(mem, workloads=("vgg16",))
+        largest = run_joint(0, spL, sfL, capL)
+        sj = np.asarray(per_workload_scores(
+            ev(jnp.asarray(joint.best_genome[None]))))[0]
+        sl = np.asarray(per_workload_scores(
+            ev(jnp.asarray(largest.best_genome[None]))))[0]
+        out[mem] = {"workloads": list(wa.names),
+                    "joint_edap": sj.tolist(),
+                    "largest_edap": sl.tolist(),
+                    "reduction_pct": (100 * (1 - sj / sl)).tolist()}
+    _save("fig3_joint_vs_largest", out)
+    best = max(max(v["reduction_pct"]) for v in out.values())
+    Bench.record("fig3_joint_vs_largest", time.perf_counter() - t0,
+                 f"max_edap_reduction_{best:.1f}pct")
+    return out
+
+
+def fig4_convergence(n_runs: int = 6):
+    """Fig. 4 + §IV-B: 4-phase GA vs non-modified GA over seeds."""
+    t0 = time.perf_counter()
+    sp, wa, ev, sf, cap = setup("rram")
+    four = [run_joint(s, sp, sf, cap) for s in range(n_runs)]
+    plain = [run_plain(100 + s, sp, sf, cap) for s in range(n_runs)]
+    out = {
+        "fourphase_best": [r.best_score for r in four],
+        "plain_best": [r.best_score for r in plain],
+        "fourphase_mean": float(np.mean([r.best_score for r in four])),
+        "fourphase_std": float(np.std([r.best_score for r in four])),
+        "plain_mean": float(np.mean([r.best_score for r in plain])),
+        "plain_std": float(np.std([r.best_score for r in plain])),
+        "fourphase_history": [r.history.tolist() for r in four],
+        "plain_history": [r.history.tolist() for r in plain],
+    }
+    _save("fig4_convergence", out)
+    Bench.record(
+        "fig4_convergence", time.perf_counter() - t0,
+        f"4phase_{out['fourphase_mean']:.3g}+-{out['fourphase_std']:.2g}_"
+        f"plain_{out['plain_mean']:.3g}+-{out['plain_std']:.2g}")
+    return out
+
+
+def table5_aggregation():
+    """Table 5: All/Max/Mean aggregation, EDAP + search time."""
+    t0 = time.perf_counter()
+    out = {}
+    for mem in ("rram", "sram"):
+        out[mem] = {}
+        for agg in ("all", "max", "mean"):
+            sp, wa, ev, _, cap = setup(mem, agg=agg)
+            obj = Objective("edap", agg)
+            res = run_joint(0, sp, lambda g: obj(ev(g)), cap)
+            per = np.asarray(per_workload_scores(
+                ev(jnp.asarray(res.best_genome[None]))))[0]
+            out[mem][agg] = {"edap_per_workload": per.tolist(),
+                             "search_time_s": res.wall_time_s}
+    _save("table5_aggregation", out)
+    tmax = out["rram"]["max"]["search_time_s"]
+    Bench.record("table5_aggregation", time.perf_counter() - t0,
+                 f"rram_max_search_{tmax:.1f}s")
+    return out
+
+
+def fig5_generalization_gap():
+    """Fig. 5: separate (workload-specific) vs joint designs, normalized.
+    Covers EDAP and EDP objectives on both memories (the paper's other
+    two single-metric panels follow the same construction)."""
+    t0 = time.perf_counter()
+    out = {}
+    for mem in ("rram", "sram"):
+        out[mem] = {}
+        for objective in ("edap", "edp"):
+            sp, wa, ev, _, cap = setup(mem, objective=objective)
+            # separate search per workload = the normalization baseline
+            sep_scores = []
+            for w in PAPER_4:
+                spw, waw, evw, sfw, capw = setup(mem, workloads=(w,),
+                                                 objective=objective)
+                r = run_joint(0, spw, sfw, capw)
+                sep_scores.append(float(np.asarray(per_workload_scores(
+                    evw(jnp.asarray(r.best_genome[None])), objective))[0, 0]))
+            variants = {}
+            obj_mean = Objective(objective, "mean")
+            variants["joint_4phase"] = run_joint(
+                0, sp, lambda g: obj_mean(ev(g)), cap)
+            variants["joint_plain"] = run_plain(
+                0, sp, lambda g: obj_mean(ev(g)), cap)
+            variants["joint_sampling_only"] = run_joint(
+                0, sp, lambda g: obj_mean(ev(g)), cap,
+                phases=(
+                    __import__("repro.core.genetic",
+                               fromlist=["PLAIN_PHASE"]).PLAIN_PHASE,),
+                g=4 * G)
+            spL, waL, evL, sfL, capL = setup(mem, workloads=("vgg16",),
+                                             objective=objective)
+            largest = run_joint(0, spL, sfL, capL)
+            rows = {}
+            for name, res in list(variants.items()) + [("largest", largest)]:
+                per = np.asarray(per_workload_scores(
+                    ev(jnp.asarray(res.best_genome[None])), objective))[0]
+                rows[name] = (per / np.asarray(sep_scores)).tolist()
+            rows["separate"] = [1.0] * 4
+            out[mem][objective] = {"normalized": rows,
+                                   "separate_abs": sep_scores}
+    _save("fig5_generalization_gap", out)
+    gap = np.mean(out["rram"]["edap"]["normalized"]["joint_4phase"])
+    Bench.record("fig5_generalization_gap", time.perf_counter() - t0,
+                 f"rram_edap_joint_gap_{gap:.2f}x_of_specific")
+    return out
+
+
+def fig6_rram_sram_insights():
+    """Fig. 6: optimized design parameters per objective, RRAM vs SRAM."""
+    t0 = time.perf_counter()
+    out = {}
+    for mem in ("rram", "sram"):
+        out[mem] = {}
+        for objective in ("edap", "energy", "delay", "area"):
+            sp, wa, ev, _, cap = setup(mem, objective=objective)
+            obj = Objective(objective, "max")
+            res = run_joint(0, sp, lambda g: obj(ev(g)), cap)
+            d = eval_design(ev, res.best_genome)
+            out[mem][objective] = {
+                "design": sp.decode(res.best_genome),
+                "vgg16_energy_mJ": float(d["energy_mJ"][1]),
+                "vgg16_latency_ms": float(d["latency_ms"][1]),
+                "area_mm2": d["area_mm2"],
+                "edap_vgg16": float(d["edap"][1]),
+            }
+    _save("fig6_rram_sram_insights", out)
+    r = out["rram"]["edap"]["edap_vgg16"]
+    s = out["sram"]["edap"]["edap_vgg16"]
+    Bench.record("fig6_rram_sram_insights", time.perf_counter() - t0,
+                 f"vgg16_edap_rram_{r:.3g}_sram_{s:.3g}")
+    return out
+
+
+def fig7_sequential_ablation():
+    """Fig. 7: joint vs sequential per-level optimization (two inits)."""
+    t0 = time.perf_counter()
+    from .sequential import sequential_search
+    out = {}
+    for mem in ("rram", "sram"):
+        sp, wa, ev, _, cap = setup(mem)
+        obj = Objective("edap", "mean")
+        sf = lambda g: obj(ev(g))
+        joint = run_joint(0, sp, sf, cap)
+        seq_largest = sequential_search(sp, sf, init="largest")
+        seq_median = sequential_search(sp, sf, init="median")
+        rows = {}
+        for name, genome in (("joint", joint.best_genome),
+                             ("seq_from_largest", seq_largest),
+                             ("seq_from_median", seq_median)):
+            d = eval_design(ev, genome)
+            rows[name] = {"edap_per_workload": d["edap"].tolist(),
+                          "area_mm2": d["area_mm2"],
+                          "feasible": d["feasible"],
+                          "within_area_constraint": d["area_mm2"] <= 800.0}
+        out[mem] = rows
+    _save("fig7_sequential_ablation", out)
+    jr = sum(out["rram"]["joint"]["edap_per_workload"])
+    sr = sum(out["rram"]["seq_from_median"]["edap_per_workload"])
+    Bench.record("fig7_sequential_ablation", time.perf_counter() - t0,
+                 f"joint_sum_{jr:.3g}_seq_median_sum_{sr:.3g}")
+    return out
+
+
+def fig8_nonidealities():
+    """Fig. 8: RRAM non-idealities — accuracy-aware objective."""
+    t0 = time.perf_counter()
+    sp, wa, ev, _, cap = setup("rram")
+    wls = get_workload_set(PAPER_4)
+    key = jax.random.PRNGKey(7)
+
+    def score_acc(g):
+        m = ev(g)
+        acc = accuracy_proxy(key, sp, np.asarray(g), wls)
+        return Objective("edap_acc", "mean")(m, accuracy=acc)
+
+    # accuracy-aware joint vs EDAP-only joint vs largest-only w/ accuracy
+    joint_acc = run_joint(0, sp, score_acc, cap, g=2)
+    obj = Objective("edap", "mean")
+    joint_edap = run_joint(0, sp, lambda g: obj(ev(g)), cap)
+    out = {}
+    for name, res in (("joint_acc_aware", joint_acc),
+                      ("joint_edap_only", joint_edap)):
+        d = eval_design(ev, res.best_genome)
+        acc = np.asarray(accuracy_proxy(
+            key, sp, res.best_genome[None], wls))[0]
+        out[name] = {"design": sp.decode(res.best_genome),
+                     "edap_per_workload": d["edap"].tolist(),
+                     "accuracy": acc.tolist()}
+    _save("fig8_nonidealities", out)
+    same = (out["joint_acc_aware"]["design"]["xbar_rows"] ==
+            out["joint_edap_only"]["design"]["xbar_rows"])
+    Bench.record("fig8_nonidealities", time.perf_counter() - t0,
+                 f"acc_aware_mean_acc_"
+                 f"{np.mean(out['joint_acc_aware']['accuracy']):.3f}_"
+                 f"same_xbar_rows_{same}")
+    return out
+
+
+def fig9_tech_pareto():
+    """Fig. 9 / Table 7: hardware-workload-technology co-optimization;
+    EDAP vs fabrication-cost Pareto front (SRAM, cost-aware objective)."""
+    t0 = time.perf_counter()
+    sp, wa, ev, _, cap = setup("sram", tech_variable=True,
+                               objective="edap_cost")
+    obj = Objective("edap_cost", "mean", area_constraint=800.0)
+    res = run_joint(0, sp, lambda g: obj(ev(g)), None, g=2 * G)
+    # Paper Fig. 9 plots ALL evaluated feasible architectures: union of
+    # the converged population and a large diverse sample of the space.
+    sample = random_genomes(jax.random.PRNGKey(99), sp, 8192)
+    # cross-node twins of the best searched designs (every tech node ×
+    # every V_op step) — the search converges to one node; the front
+    # needs its counterfactuals at the other nodes too
+    ti = sp.index("tech_idx")
+    vi = sp.index("v_op_step")
+    twins = []
+    for g in np.asarray(res.population)[:16]:
+        for t in range(len(sp.values[ti])):
+            for v in range(len(sp.values[vi])):
+                tw = g.copy()
+                tw[ti], tw[vi] = t, v
+                twins.append(tw)
+    pop = jnp.concatenate([jnp.asarray(res.population),
+                           jnp.asarray(np.stack(twins)), sample], axis=0)
+    m = ev(pop)
+    edap = np.asarray(per_workload_scores(m, "edap")).mean(axis=1)
+    cost = np.asarray(m.cost)
+    area = np.asarray(m.area)
+    ok = area <= 800.0
+    idx, e_f, c_f = edap_cost_front(edap[ok], cost[ok])
+    genomes_ok = np.asarray(pop)[ok]
+    seen, front = set(), []
+    for i, e, c in zip(idx, e_f, c_f):
+        key_ = (round(float(e), 6), round(float(c), 6))
+        if key_ in seen:
+            continue
+        seen.add(key_)
+        front.append({"edap": float(e), "cost": float(c),
+                      "design": sp.decode(genomes_ok[i])})
+    techs = [int(d["design"]["tech_idx"]) for d in front]
+    from repro.core.search_space import TECH_NODES_NM
+    out = {"front": front,
+           "front_tech_nm": [float(TECH_NODES_NM[t]) for t in techs]}
+    _save("fig9_tech_pareto", out)
+    Bench.record("fig9_tech_pareto", time.perf_counter() - t0,
+                 f"front_size_{len(front)}_nodes_"
+                 + "-".join(str(int(n)) for n in sorted(
+                     set(out["front_tech_nm"]))))
+    return out
+
+
+def fig10_scalability():
+    """Fig. 10 / §IV-J: 9-workload SRAM weight-swapping, mean
+    aggregation (the paper switches to mean here for exactly the
+    dominance reason discussed in the module docstring)."""
+    t0 = time.perf_counter()
+    sp, wa, ev, _, cap = setup("sram", workloads=PAPER_9, agg="mean")
+    obj = Objective("edap", "mean")
+    joint = run_joint(0, sp, lambda g: obj(ev(g)), cap)
+    # largest workload by largest layer (VGG16, §IV-J)
+    spL, waL, evL, sfL, capL = setup("sram", workloads=("vgg16",))
+    largest = run_joint(0, spL, sfL, capL)
+    sj = np.asarray(per_workload_scores(
+        ev(jnp.asarray(joint.best_genome[None]))))[0]
+    sl = np.asarray(per_workload_scores(
+        ev(jnp.asarray(largest.best_genome[None]))))[0]
+    out = {"workloads": list(wa.names),
+           "joint_edap": sj.tolist(), "largest_edap": sl.tolist(),
+           "reduction_pct": (100 * (1 - sj / sl)).tolist(),
+           "sampling_time_s": joint.sampling_time_s,
+           "total_time_s": joint.wall_time_s,
+           "sampling_fraction": joint.sampling_time_s
+           / max(joint.wall_time_s, 1e-9)}
+    _save("fig10_scalability", out)
+    Bench.record("fig10_scalability", time.perf_counter() - t0,
+                 f"max_reduction_{max(out['reduction_pct']):.1f}pct_"
+                 f"sampling_frac_{out['sampling_fraction']:.2f}")
+    return out
+
+
+def table6_runtime():
+    """Table 6: runtime comparison — separate vs joint (plain) vs joint
+    (proposed), equal population/generations."""
+    t0 = time.perf_counter()
+    sp, wa, ev, sf, cap = setup("rram")
+    tsep = 0.0
+    for w in PAPER_4:
+        spw, waw, evw, sfw, capw = setup("rram", workloads=(w,))
+        r = run_joint(0, spw, sfw, capw)
+        tsep += r.wall_time_s
+    plain = run_plain(0, sp, sf, cap)
+    prop = run_joint(0, sp, sf, cap)
+    out = {"separate_total_s": tsep,
+           "joint_plain_s": plain.wall_time_s,
+           "joint_proposed_s": prop.wall_time_s,
+           "proposed_sampling_s": prop.sampling_time_s,
+           "sampling_overhead_frac": prop.sampling_time_s
+           / max(prop.wall_time_s, 1e-9)}
+    _save("table6_runtime", out)
+    Bench.record("table6_runtime", time.perf_counter() - t0,
+                 f"sampling_overhead_{100*out['sampling_overhead_frac']:.0f}pct")
+    return out
+
+
+def table3_algorithms():
+    """Table 3 / §III-C1: GA vs PSO/ES/SRES/CMA-ES/G3PCX on the reduced
+    RRAM space with exhaustive ground truth (240 designs)."""
+    import itertools
+    from repro.core import reduced_rram_space
+    from repro.core.baselines import (cmaes_search, es_search,
+                                      g3pcx_search, pso_search)
+    from repro.core.genetic import plain_ga_search
+    t0 = time.perf_counter()
+    sp = reduced_rram_space()
+    wa = pack(get_workload_set(PAPER_4))
+    from repro.core import make_evaluator as _mk
+    ev = _mk(sp, wa)
+    # pure EDAP landscape (no feasibility wall) — see tests/test_baselines
+    score_fn = lambda g: per_workload_scores(ev(g), "edap").mean(axis=1)
+    combos = np.asarray(list(itertools.product(
+        *[range(len(v)) for v in sp.values])), np.int32)
+    scores = np.asarray(score_fn(jnp.asarray(combos)))
+    gmin = float(scores[scores < 1e29].min())
+
+    out = {"global_min": gmin, "space_size": int(sp.size), "algorithms": {}}
+    runs = {
+        "GA": lambda k: plain_ga_search(k, sp, score_fn, p_ga=24,
+                                        total_generations=40),
+        "ES": lambda k: es_search(k, sp, score_fn, iters=40),
+        "SRES": lambda k: es_search(k, sp, score_fn, iters=40,
+                                    stochastic_ranking=True),
+        "PSO": lambda k: pso_search(k, sp, score_fn, iters=40),
+        "CMA-ES": lambda k: cmaes_search(k, sp, score_fn, iters=40),
+        "G3PCX": lambda k: g3pcx_search(k, sp, score_fn, iters=40),
+    }
+    for name, fn in runs.items():
+        hits, times, bests = 0, [], []
+        for seed in range(5):
+            t1 = time.perf_counter()
+            r = fn(jax.random.PRNGKey(seed))
+            times.append(time.perf_counter() - t1)
+            bests.append(float(r.best_score))
+            hits += int(r.best_score <= gmin * 1.0001)
+        out["algorithms"][name] = {
+            "global_min_hits": f"{hits}/5",
+            "mean_best": float(np.mean(bests)),
+            "mean_time_s": float(np.mean(times)),
+        }
+    _save("table3_algorithms", out)
+    summary = "_".join(f"{k}{v['global_min_hits'].split('/')[0]}"
+                       for k, v in out["algorithms"].items())
+    Bench.record("table3_algorithms", time.perf_counter() - t0, summary)
+    return out

@@ -1,0 +1,81 @@
+"""Shared helpers for the paper-reproduction benchmarks.
+
+Search scales are reduced relative to the paper (P_H=1000/P_E=500/G=10
+per phase on 64 cores -> P_H=300/P_E=120/G=4 on this 1-core container);
+population sizes are kept IDENTICAL across benchmarks so jit caches are
+reused. The paper's qualitative claims are scale-robust (verified in
+tests/test_genetic.py at even smaller scales).
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (Objective, PAPER_4, PAPER_9, SearchResult,
+                        from_arch_config, get_space, get_workload_set,
+                        joint_search, make_evaluator, pack,
+                        plain_ga_search)
+from repro.core.objectives import per_workload_scores
+
+P_H, P_E, P_GA, G = 300, 120, 24, 4
+
+
+class Bench:
+    rows = []
+
+    @classmethod
+    def record(cls, name: str, seconds: float, derived: str):
+        us = seconds * 1e6
+        cls.rows.append(f"{name},{us:.0f},{derived}")
+        print(f"{name},{us:.0f},{derived}", flush=True)
+
+
+def setup(mem: str, workloads=PAPER_4, objective="edap", agg="max",
+          tech_variable=False):
+    sp = get_space(mem, tech_variable)
+    wls = get_workload_set(workloads) if isinstance(workloads[0], str) \
+        else list(workloads)
+    wa = pack(wls)
+    ev = make_evaluator(sp, wa)
+    obj = Objective(objective, agg)
+
+    def score_fn(g):
+        return obj(ev(g))
+
+    cap = None
+    if mem == "rram":
+        def cap(g):
+            return np.asarray(ev(jnp.asarray(g)).feasible)
+    return sp, wa, ev, score_fn, cap
+
+
+def run_joint(seed, sp, score_fn, cap, phases=None, hamming=True,
+              g=G) -> SearchResult:
+    kw = dict(p_h=P_H, p_e=P_E, p_ga=P_GA, generations_per_phase=g,
+              capacity_filter=cap, hamming_sampling=hamming)
+    if phases is not None:
+        kw["phases"] = phases
+    return joint_search(jax.random.PRNGKey(seed), sp, score_fn, **kw)
+
+
+def run_plain(seed, sp, score_fn, cap, g=4 * G) -> SearchResult:
+    return plain_ga_search(jax.random.PRNGKey(seed), sp, score_fn,
+                           p_ga=P_GA, total_generations=g,
+                           capacity_filter=cap)
+
+
+def eval_design(ev, genome) -> Dict[str, np.ndarray]:
+    m = ev(jnp.asarray(np.asarray(genome)[None]))
+    return {
+        "edap": np.asarray(per_workload_scores(m, "edap"))[0],
+        "edp": np.asarray(per_workload_scores(m, "edp"))[0],
+        "energy_mJ": np.asarray(m.energy[0]) * 1e3,
+        "latency_ms": np.asarray(m.latency[0]) * 1e3,
+        "area_mm2": float(m.area[0]),
+        "cost": float(m.cost[0]),
+        "feasible": bool(m.feasible[0]),
+    }

@@ -1,0 +1,220 @@
+"""Roofline analysis from the dry-run artifacts (deliverable g).
+
+Hardware model (TPU v5e-class, per chip): 197 TFLOP/s bf16,
+819 GB/s HBM, ~50 GB/s/link ICI.
+
+Three terms per (arch × shape) on the single-pod mesh:
+  compute    = FLOPs / (chips × peak)
+  memory     = HBM bytes / (chips × bw)
+  collective = collective bytes / (chips × link bw)
+
+FLOPs: XLA's HloCostAnalysis counts while-loop bodies ONCE, so raw HLO
+flops undercount scanned programs; we therefore report BOTH the raw HLO
+number and an exact analytic count (standard MFU accounting: parameter
+GEMMs + quadratic attention + recurrent state updates). The analytic
+number drives the roofline; the raw number is kept for traceability.
+HBM bytes: analytic traffic model (params/optimizer-state/KV-cache/
+activation reads+writes), alongside XLA's raw 'bytes accessed'.
+Collectives: parsed from optimized HLO with while-body trip-count
+multiplication (launch/dryrun.py:collective_bytes).
+"""
+from __future__ import annotations
+
+import dataclasses
+import glob
+import json
+import os
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.configs import SHAPES, get_config
+from repro.models import ArchConfig
+
+PEAK_FLOPS = 197e12        # bf16 / chip
+HBM_BW = 819e9             # B/s / chip
+ICI_BW = 50e9              # B/s / link
+BYTES_PARAM = 2            # bf16
+BYTES_OPT = 16             # f32 m, v read+write... see _train_bytes
+
+
+def _attn_context(cfg: ArchConfig, S: int, kind: str) -> Dict[str, float]:
+    """Average context length per attention-layer type."""
+    full = S / 2 if kind != "decode" else S
+    out = {}
+    for k in set(cfg.layout()):
+        if k == "attn":
+            out[k] = min(full, cfg.window) if cfg.window else full
+        elif k == "local_attn":
+            out[k] = min(full, cfg.local_window)
+        elif k == "cross_attn":
+            out[k] = cfg.n_img_tokens
+    return out
+
+
+def analytic_flops(cfg: ArchConfig, shape_name: str) -> float:
+    """Exact useful-FLOP count for one step of the cell."""
+    sh = SHAPES[shape_name]
+    B, S = sh.global_batch, sh.seq_len
+    tokens = B * S if sh.kind != "decode" else B
+    # parameter GEMMs (fwd 2ND; train adds 4ND backward)
+    mult = 6.0 if sh.kind == "train" else 2.0
+    total = mult * cfg.active_param_count() * tokens
+    # attention score/PV flops
+    ctx = _attn_context(cfg, S, sh.kind)
+    attn_mult = 3.0 if sh.kind == "train" else 1.0  # bwd = 2x fwd
+    q_tokens = tokens if sh.kind != "decode" else B
+    for k in cfg.layout():
+        if k in ctx:
+            total += attn_mult * 4.0 * q_tokens * ctx[k] * \
+                cfg.n_heads * cfg.head_dim
+        elif k == "mlstm":
+            w = 2 * cfg.d_model
+            hd = w // cfg.n_heads
+            total += attn_mult * 4.0 * q_tokens * w * hd
+    return total
+
+
+def analytic_hbm_bytes(cfg: ArchConfig, shape_name: str,
+                       chips: int = 256) -> float:
+    """Whole-step HBM traffic (all chips summed).
+
+    train: params read + grads written + Adam m/v read+write (ZeRO-1:
+    each shard touched once fleet-wide) + remat'd activations.
+    prefill: params read (per chip — weights are TP-sharded so the fleet
+    reads each param once per chip in its shard) + KV cache write.
+    decode: active params + full KV cache read.
+    """
+    sh = SHAPES[shape_name]
+    B, S = sh.global_batch, sh.seq_len
+    P = cfg.param_count()
+    Pa = cfg.active_param_count()
+    d, L = cfg.d_model, cfg.n_layers
+    kv_bytes_layer = 2 * cfg.n_kv_heads * cfg.head_dim * BYTES_PARAM
+    n_attn = sum(1 for k in cfg.layout() if k in ("attn", "local_attn"))
+    if sh.kind == "train":
+        # p(r) + p(w) + g(w) + m,v r+w in f32
+        state = P * (2 + 2 + 2 + 16)
+        acts = 2 * B * S * d * L * BYTES_PARAM * 2   # fwd write + bwd read
+        return state + acts
+    if sh.kind == "prefill":
+        cache = B * min(S, max(cfg.window or S, 1)) * n_attn * kv_bytes_layer
+        acts = 2 * B * S * d * L * BYTES_PARAM
+        return P * BYTES_PARAM + cache + acts
+    # decode
+    cache_len = min(S, cfg.window) if cfg.window else S
+    if "local_attn" in cfg.layout():
+        cache_len = cfg.local_window
+    cache = B * cache_len * n_attn * kv_bytes_layer
+    return Pa * BYTES_PARAM + cache
+
+
+@dataclasses.dataclass
+class RooflineRow:
+    arch: str
+    shape: str
+    mesh: str
+    tag: str
+    chips: int
+    flops_analytic: float
+    flops_hlo_raw: float
+    hbm_bytes_analytic: float
+    bytes_hlo_raw: float
+    collective_bytes: float
+    t_compute: float
+    t_memory: float
+    t_collective: float
+    bottleneck: str
+    model_flops: float
+    useful_ratio: float
+    per_device_hbm: float
+
+    def roofline_fraction(self) -> float:
+        """useful-compute time / bound time (the score we hillclimb)."""
+        t_bound = max(self.t_compute, self.t_memory, self.t_collective)
+        t_useful = self.model_flops / (self.chips * PEAK_FLOPS)
+        return t_useful / t_bound if t_bound > 0 else 0.0
+
+
+def analyze_record(rec: dict) -> Optional[RooflineRow]:
+    arch, shape = rec["arch"], rec["shape"]
+    if arch == "imc_search":
+        return None
+    cfg = get_config(arch)
+    chips = rec["n_devices"]
+    fa = analytic_flops(cfg, shape)
+    hbm = analytic_hbm_bytes(cfg, shape, chips)
+    coll = rec["collective_total"]
+    t_c = fa / (chips * PEAK_FLOPS)
+    t_m = hbm / (chips * HBM_BW)
+    t_x = coll / (chips * ICI_BW)
+    terms = {"compute": t_c, "memory": t_m, "collective": t_x}
+    bneck = max(terms, key=terms.get)
+    sh = SHAPES[shape]
+    tokens = (sh.global_batch * sh.seq_len if sh.kind == "train"
+              else sh.global_batch if sh.kind == "decode"
+              else sh.global_batch * sh.seq_len)
+    n_active = cfg.active_param_count()
+    model_flops = (6.0 if sh.kind == "train" else 2.0) * n_active * tokens
+    mem = rec.get("memory", {})
+    per_dev = (mem.get("argument_size_in_bytes", 0)
+               + mem.get("output_size_in_bytes", 0)
+               + mem.get("temp_size_in_bytes", 0))
+    return RooflineRow(
+        arch=arch, shape=shape, mesh=rec["mesh"], tag=rec.get("tag", ""),
+        chips=chips, flops_analytic=fa,
+        flops_hlo_raw=rec["cost"].get("flops", 0.0),
+        hbm_bytes_analytic=hbm,
+        bytes_hlo_raw=rec["cost"].get("bytes accessed", 0.0),
+        collective_bytes=coll, t_compute=t_c, t_memory=t_m,
+        t_collective=t_x, bottleneck=bneck, model_flops=model_flops,
+        useful_ratio=model_flops / fa if fa else 0.0,
+        per_device_hbm=per_dev)
+
+
+def load_rows(dryrun_dir: str = "experiments/dryrun",
+              mesh: str = "pod256", tag: str = "") -> List[RooflineRow]:
+    rows = []
+    for f in sorted(glob.glob(os.path.join(dryrun_dir, "*.json"))):
+        rec = json.load(open(f))
+        if rec["mesh"] != mesh or rec.get("tag", "") != tag:
+            continue
+        row = analyze_record(rec)
+        if row:
+            rows.append(row)
+    return rows
+
+
+def format_table(rows: List[RooflineRow]) -> str:
+    hdr = (f"{'arch':22s} {'shape':12s} {'t_comp':>9s} {'t_mem':>9s} "
+           f"{'t_coll':>9s} {'bneck':>10s} {'roofline%':>9s} "
+           f"{'useful%':>8s}")
+    lines = [hdr, "-" * len(hdr)]
+    for r in rows:
+        lines.append(
+            f"{r.arch:22s} {r.shape:12s} {r.t_compute:9.2e} "
+            f"{r.t_memory:9.2e} {r.t_collective:9.2e} {r.bottleneck:>10s} "
+            f"{100*r.roofline_fraction():8.1f}% "
+            f"{100*r.useful_ratio:7.1f}%")
+    return "\n".join(lines)
+
+
+def main() -> None:
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--mesh", default="pod256")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--json-out", default=None)
+    args = ap.parse_args()
+    rows = load_rows(args.dir, args.mesh, args.tag)
+    print(format_table(rows))
+    if args.json_out:
+        with open(args.json_out, "w") as f:
+            json.dump([dataclasses.asdict(r) | {
+                "roofline_fraction": r.roofline_fraction()} for r in rows],
+                f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

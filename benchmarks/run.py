@@ -1,0 +1,57 @@
+"""Benchmark harness: one function per paper table/figure plus the
+roofline deliverable. Prints ``name,us_per_call,derived`` CSV.
+
+  PYTHONPATH=src python -m benchmarks.run             # everything
+  PYTHONPATH=src python -m benchmarks.run fig4 fig10  # subset
+"""
+from __future__ import annotations
+
+import sys
+
+from . import bench_paper
+from .common import Bench
+
+ALL = {
+    "table3": bench_paper.table3_algorithms,
+    "fig3": bench_paper.fig3_joint_vs_largest,
+    "fig4": bench_paper.fig4_convergence,
+    "table5": bench_paper.table5_aggregation,
+    "fig5": bench_paper.fig5_generalization_gap,
+    "fig6": bench_paper.fig6_rram_sram_insights,
+    "fig7": bench_paper.fig7_sequential_ablation,
+    "fig8": bench_paper.fig8_nonidealities,
+    "fig9": bench_paper.fig9_tech_pareto,
+    "fig10": bench_paper.fig10_scalability,
+    "table6": bench_paper.table6_runtime,
+}
+
+
+def roofline_table() -> None:
+    """Deliverable g: three-term roofline per (arch x shape) from the
+    dry-run artifacts (skipped gracefully if the dry-run has not run)."""
+    import os
+    from .roofline import format_table, load_rows
+    if not os.path.isdir("experiments/dryrun"):
+        print("roofline: experiments/dryrun missing "
+              "(run python -m repro.launch.dryrun --all first)")
+        return
+    rows = load_rows("experiments/dryrun", "pod256")
+    if rows:
+        print(format_table(rows))
+        Bench.record("roofline_pod256", 0.0, f"cells_{len(rows)}")
+
+
+def main() -> None:
+    names = sys.argv[1:] or list(ALL)
+    print("name,us_per_call,derived")
+    for n in names:
+        if n == "roofline":
+            roofline_table()
+            continue
+        ALL[n]()
+    if not sys.argv[1:]:
+        roofline_table()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,43 @@
+"""End-to-end driver (deliverable b): train a ~25M-param qwen3-family
+model for a few hundred steps on the synthetic pipeline, with
+checkpointing — kill it mid-run and rerun to see bit-exact resume.
+
+  PYTHONPATH=src python examples/train_lm.py [--steps 300]
+
+The same code path scales to the production mesh via
+``python -m repro.launch.train --arch qwen3_4b`` under
+jax.distributed.initialize().
+"""
+import argparse
+import dataclasses
+
+import jax
+
+from repro.configs import get_config
+from repro.data import SyntheticTokenPipeline
+from repro.models import init_params
+from repro.train.loop import init_train_state, make_train_step, train_loop
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--steps", type=int, default=300)
+ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm_25m")
+args = ap.parse_args()
+
+# ~100M-param member of the qwen3 family (same block structure)
+cfg = dataclasses.replace(
+    get_config("qwen3_4b"), n_layers=4, d_model=256, n_heads=4,
+    n_kv_heads=2, head_dim=64, d_ff=768, vocab_size=32000,
+    dtype="float32")
+# (--steps 300 at batch 8 x seq 128 ~= a few minutes on 1 CPU core;
+# the full-size path is python -m repro.launch.train --arch qwen3_4b)
+print(f"{cfg.name}-mini: {cfg.param_count()/1e6:.1f}M params")
+
+params, _ = init_params(jax.random.PRNGKey(0), cfg)
+state = init_train_state(params)
+step = jax.jit(make_train_step(cfg, peak_lr=3e-4, warmup=20,
+                               total_steps=args.steps))
+pipe = SyntheticTokenPipeline(cfg, global_batch=8, seq_len=128,
+                              process_index=0, process_count=1)
+state = train_loop(state, step, pipe, args.steps,
+                   ckpt_dir=args.ckpt_dir, ckpt_every=50, log_every=20)
+print(f"finished at step {int(state.step)}")

@@ -1,0 +1,86 @@
+"""Checkpointing: flattened-pytree npz with atomic rename.
+
+Per-host shard saving: each process saves its addressable shard set
+under its process index; on a single host this degenerates to one file.
+Restore maps leaves back by tree path and device_puts with the target
+array's sharding (so restore works across mesh changes — see
+train/loop.py:elastic_remesh).
+"""
+from __future__ import annotations
+
+import os
+import re
+import tempfile
+from typing import Any, List, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten(tree: Any):
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    return leaves, treedef
+
+
+def save(ckpt_dir: str, step: int, tree: Any, keep: int = 3) -> str:
+    os.makedirs(ckpt_dir, exist_ok=True)
+    leaves, _ = _flatten(tree)
+    arrays = {f"leaf_{i}": np.asarray(x) for i, x in enumerate(leaves)}
+    proc = jax.process_index()
+    final = os.path.join(ckpt_dir, f"step_{step:08d}_p{proc}.npz")
+    fd, tmp = tempfile.mkstemp(dir=ckpt_dir, suffix=".tmp")
+    with os.fdopen(fd, "wb") as f:
+        np.savez(f, **arrays)
+    os.replace(tmp, final)  # atomic: no torn checkpoints on crash
+    _gc(ckpt_dir, keep)
+    return final
+
+
+def list_steps(ckpt_dir: str) -> List[int]:
+    if not os.path.isdir(ckpt_dir):
+        return []
+    steps = set()
+    for f in os.listdir(ckpt_dir):
+        m = re.match(r"step_(\d+)_p\d+\.npz$", f)
+        if m:
+            steps.add(int(m.group(1)))
+    return sorted(steps)
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    steps = list_steps(ckpt_dir)
+    return steps[-1] if steps else None
+
+
+def restore(ckpt_dir: str, step: int, target: Any) -> Any:
+    """Restore into the structure (and shardings) of ``target``."""
+    proc = jax.process_index()
+    path = os.path.join(ckpt_dir, f"step_{step:08d}_p{proc}.npz")
+    data = np.load(path)
+    leaves, treedef = _flatten(target)
+    if len(data.files) != len(leaves):
+        raise ValueError(
+            f"checkpoint at {path} has {len(data.files)} leaves but the "
+            f"target tree has {len(leaves)} — wrong model/config?")
+    new_leaves = []
+    for i, leaf in enumerate(leaves):
+        arr = data[f"leaf_{i}"]
+        if hasattr(leaf, "shape") and tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(
+                f"checkpoint leaf {i} shape {arr.shape} != target "
+                f"{leaf.shape} — checkpoint from a different config?")
+        if hasattr(leaf, "sharding") and leaf.sharding is not None:
+            try:
+                arr = jax.device_put(arr, leaf.sharding)
+            except Exception:
+                arr = jax.device_put(arr)
+        new_leaves.append(arr)
+    return jax.tree_util.tree_unflatten(treedef, new_leaves)
+
+
+def _gc(ckpt_dir: str, keep: int) -> None:
+    steps = list_steps(ckpt_dir)
+    for s in steps[:-keep]:
+        for f in os.listdir(ckpt_dir):
+            if f.startswith(f"step_{s:08d}_"):
+                os.remove(os.path.join(ckpt_dir, f))

@@ -1,0 +1,16 @@
+"""Core: the paper's joint hardware-workload co-optimization for IMC
+accelerators — search space, vectorized cost model, objectives,
+Hamming-distance sampling, the 4-phase GA, non-idealities, and the
+distributed (mesh-sharded) population evaluator."""
+from .search_space import (SearchSpace, get_space, rram_space, sram_space,
+                           reduced_rram_space)
+from .cost_model import (CostMetrics, HWConstants, evaluate_population,
+                         make_evaluator)
+from .objectives import Objective, per_workload_scores, AREA_CONSTRAINT_MM2
+from .sampling import hamming_select, random_genomes, sample_initial
+from .genetic import (FOUR_PHASES, PLAIN_PHASE, Phase, SearchResult,
+                      joint_search, plain_ga_search, run_ga)
+from .workloads import (PAPER_4, PAPER_9, Workload, WorkloadArrays,
+                        from_arch_config, get_workload, get_workload_set,
+                        pack)
+from . import nonideal, pareto, distributed

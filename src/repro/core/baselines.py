@@ -1,0 +1,178 @@
+"""Baseline optimizers for the algorithm-selection study (paper §III-C1,
+Table 3): PSO, (µ+λ)-ES, stochastic-ranking ES (SRES), CMA-ES and G3PCX,
+all operating on the real-coded relaxation of the discrete genome used
+by genetic.py (index -> (i+0.5)/cardinality).
+
+The paper evaluates these on a REDUCED RRAM space (Xbar_rows, Xbar_cols,
+C_per_tile, Bits_cell) small enough to enumerate exhaustively, and asks
+which algorithms reach the global minimum (Table 3: GA/ES/SRES do; PSO
+and G3PCX stall in local minima; CMA-ES fails to converge).
+benchmarks/bench_paper.py:table3_algorithms reruns that protocol.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .genetic import _to_index, _to_real
+from .search_space import SearchSpace
+
+
+class BaselineResult(NamedTuple):
+    best_genome: np.ndarray
+    best_score: float
+    evaluations: int
+    wall_time_s: float
+
+
+def _decode(x, cards):
+    return _to_index(jnp.clip(x, 0.0, 1.0 - 1e-6), cards)
+
+
+def _score_real(score_fn, x, cards):
+    return np.asarray(score_fn(_decode(jnp.asarray(x), cards)))
+
+
+def pso_search(key, space: SearchSpace, score_fn: Callable, n_particles=24,
+               iters=40, w=0.7, c1=1.5, c2=1.5) -> BaselineResult:
+    t0 = time.perf_counter()
+    cards = jnp.asarray(space.cardinalities.astype(np.float32))
+    rng = np.random.default_rng(int(jax.random.randint(key, (), 0, 2**31 - 1)))
+    x = rng.random((n_particles, space.n_params)).astype(np.float32)
+    v = (rng.random(x.shape).astype(np.float32) - 0.5) * 0.2
+    s = _score_real(score_fn, x, cards)
+    pbest_x, pbest_s = x.copy(), s.copy()
+    g = int(np.argmin(s))
+    gbest_x, gbest_s = x[g].copy(), float(s[g])
+    evals = n_particles
+    for _ in range(iters):
+        r1 = rng.random(x.shape).astype(np.float32)
+        r2 = rng.random(x.shape).astype(np.float32)
+        v = (w * v + c1 * r1 * (pbest_x - x) + c2 * r2 * (gbest_x - x))
+        x = np.clip(x + v, 0.0, 1.0 - 1e-6)
+        s = _score_real(score_fn, x, cards)
+        evals += n_particles
+        imp = s < pbest_s
+        pbest_x[imp], pbest_s[imp] = x[imp], s[imp]
+        g = int(np.argmin(pbest_s))
+        if pbest_s[g] < gbest_s:
+            gbest_x, gbest_s = pbest_x[g].copy(), float(pbest_s[g])
+    genome = np.asarray(_decode(jnp.asarray(gbest_x[None]), cards))[0]
+    return BaselineResult(genome, gbest_s, evals, time.perf_counter() - t0)
+
+
+def es_search(key, space: SearchSpace, score_fn: Callable, mu=8, lam=24,
+              iters=40, sigma0=0.3, stochastic_ranking=False,
+              ) -> BaselineResult:
+    """(µ+λ)-ES with self-adaptive step size; stochastic_ranking=True
+    gives the SRES flavor (rank perturbation, Runarsson & Yao)."""
+    t0 = time.perf_counter()
+    cards = jnp.asarray(space.cardinalities.astype(np.float32))
+    rng = np.random.default_rng(int(jax.random.randint(key, (), 0, 2**31 - 1)))
+    pop = rng.random((mu, space.n_params)).astype(np.float32)
+    sig = np.full(mu, sigma0, np.float32)
+    s = _score_real(score_fn, pop, cards)
+    evals = mu
+    tau = 1.0 / np.sqrt(2 * space.n_params)
+    for _ in range(iters):
+        parents = rng.integers(0, mu, lam)
+        child_sig = sig[parents] * np.exp(tau * rng.standard_normal(lam)
+                                          ).astype(np.float32)
+        children = np.clip(
+            pop[parents] + child_sig[:, None]
+            * rng.standard_normal((lam, space.n_params)).astype(np.float32),
+            0.0, 1.0 - 1e-6)
+        cs = _score_real(score_fn, children, cards)
+        evals += lam
+        all_x = np.concatenate([pop, children])
+        all_sig = np.concatenate([sig, child_sig])
+        all_s = np.concatenate([s, cs])
+        if stochastic_ranking:
+            # bubble-sort with probabilistic swaps on near-ties
+            order = np.argsort(all_s + 0.02 * np.abs(all_s)
+                               * rng.standard_normal(all_s.shape))
+        else:
+            order = np.argsort(all_s)
+        keep = order[:mu]
+        pop, sig, s = all_x[keep], all_sig[keep], all_s[keep]
+    b = int(np.argmin(s))
+    genome = np.asarray(_decode(jnp.asarray(pop[b][None]), cards))[0]
+    return BaselineResult(genome, float(s[b]), evals,
+                          time.perf_counter() - t0)
+
+
+def cmaes_search(key, space: SearchSpace, score_fn: Callable, lam=24,
+                 iters=40, sigma0=0.3) -> BaselineResult:
+    """Minimal CMA-ES (rank-mu update, no evolution paths)."""
+    t0 = time.perf_counter()
+    n = space.n_params
+    cards = jnp.asarray(space.cardinalities.astype(np.float32))
+    rng = np.random.default_rng(int(jax.random.randint(key, (), 0, 2**31 - 1)))
+    mean = np.full(n, 0.5, np.float64)
+    sigma = sigma0
+    C = np.eye(n)
+    mu = lam // 2
+    wts = np.log(mu + 0.5) - np.log(np.arange(1, mu + 1))
+    wts /= wts.sum()
+    best_s, best_x = np.inf, mean.copy()
+    evals = 0
+    for _ in range(iters):
+        try:
+            A = np.linalg.cholesky(C + 1e-10 * np.eye(n))
+        except np.linalg.LinAlgError:
+            A = np.eye(n)
+        z = rng.standard_normal((lam, n))
+        x = np.clip(mean + sigma * z @ A.T, 0.0, 1.0 - 1e-6)
+        s = _score_real(score_fn, x.astype(np.float32), cards)
+        evals += lam
+        order = np.argsort(s)
+        if s[order[0]] < best_s:
+            best_s, best_x = float(s[order[0]]), x[order[0]].copy()
+        sel = x[order[:mu]]
+        mean = wts @ sel
+        y = (sel - mean) / max(sigma, 1e-12)
+        C = 0.7 * C + 0.3 * (y.T * wts) @ y
+        sigma *= np.exp(0.1 * (np.linalg.norm(z[order[0]]) / np.sqrt(n)
+                               - 1.0))
+        sigma = float(np.clip(sigma, 1e-4, 1.0))
+    genome = np.asarray(_decode(jnp.asarray(
+        best_x[None].astype(np.float32)), cards))[0]
+    return BaselineResult(genome, best_s, evals, time.perf_counter() - t0)
+
+
+def g3pcx_search(key, space: SearchSpace, score_fn: Callable, pop_size=24,
+                 iters=40, n_parents=3, n_offspring=2) -> BaselineResult:
+    """G3 model with a simplified parent-centric crossover (Deb et al.)."""
+    t0 = time.perf_counter()
+    cards = jnp.asarray(space.cardinalities.astype(np.float32))
+    rng = np.random.default_rng(int(jax.random.randint(key, (), 0, 2**31 - 1)))
+    pop = rng.random((pop_size, space.n_params)).astype(np.float32)
+    s = _score_real(score_fn, pop, cards).copy()
+    evals = pop_size
+    for _ in range(iters):
+        best = int(np.argmin(s))
+        idx = rng.choice(pop_size, n_parents - 1, replace=False)
+        parents = np.concatenate([pop[best][None], pop[idx]])
+        centroid = parents.mean(axis=0)
+        kids = []
+        for _ in range(n_offspring):
+            d = pop[best] - centroid
+            noise = 0.1 * rng.standard_normal(space.n_params)
+            kids.append(np.clip(pop[best] + 0.5 * d + noise, 0.0,
+                                1.0 - 1e-6).astype(np.float32))
+        kids = np.stack(kids)
+        ks = _score_real(score_fn, kids, cards)
+        evals += n_offspring
+        # replace two random members if improved
+        repl = rng.choice(pop_size, n_offspring, replace=False)
+        for r, kx, kv in zip(repl, kids, ks):
+            if kv < s[r]:
+                pop[r], s[r] = kx, kv
+    b = int(np.argmin(s))
+    genome = np.asarray(_decode(jnp.asarray(pop[b][None]), cards))[0]
+    return BaselineResult(genome, float(s[b]), evals,
+                          time.perf_counter() - t0)

@@ -1,0 +1,91 @@
+"""Objective functions and aggregation schemes (paper Eq. 3, §IV-C).
+
+A score function maps CostMetrics -> (P,) scores (lower is better),
+with the area constraint A <= A_constr and capacity feasibility folded
+in as +inf penalties (the paper's s.t. A <= 800 mm²).
+
+Aggregations over the workload axis (§IV-C):
+  max  — f = max(E_w) * max(L_w) * A          (Eq. 3, default)
+  mean — f = mean(E_w) * mean(L_w) * A
+  all  — f = prod(E_w) * prod(L_w) * A
+Units: energy mJ, latency ms, area mm² (so EDAP lands in the paper's
+mJ·ms·mm² scale).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax.numpy as jnp
+
+from .cost_model import CostMetrics
+
+AREA_CONSTRAINT_MM2 = 800.0
+_BIG = 1.0e30
+
+
+def _agg(x, scheme: str):
+    if scheme == "max":
+        return jnp.max(x, axis=1)
+    if scheme == "mean":
+        return jnp.mean(x, axis=1)
+    if scheme == "all":
+        # product in log-space for numerical sanity
+        return jnp.exp(jnp.sum(jnp.log(jnp.maximum(x, 1e-30)), axis=1))
+    raise ValueError(scheme)
+
+
+@dataclasses.dataclass(frozen=True)
+class Objective:
+    """kind: edap | edp | energy | delay | area | edap_cost | edap_acc"""
+    kind: str = "edap"
+    aggregation: str = "max"
+    area_constraint: float = AREA_CONSTRAINT_MM2
+
+    def __call__(self, m: CostMetrics,
+                 accuracy: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+        e_mj = _agg(m.energy * 1e3, self.aggregation)
+        l_ms = _agg(m.latency * 1e3, self.aggregation)
+        a = m.area
+        if self.kind == "edap":
+            s = e_mj * l_ms * a
+        elif self.kind == "edp":
+            s = e_mj * l_ms
+        elif self.kind == "energy":
+            s = e_mj
+        elif self.kind == "delay":
+            s = l_ms
+        elif self.kind == "area":
+            s = a
+        elif self.kind == "edap_cost":
+            # §IV-I: cost = alpha * A replaces the raw area term
+            s = e_mj * l_ms * m.cost
+        elif self.kind == "edap_acc":
+            # §IV-H: EDAP / prod(Acc_w); accuracy (P, W) in (0, 1]
+            assert accuracy is not None
+            acc_prod = jnp.exp(jnp.sum(jnp.log(
+                jnp.maximum(accuracy, 1e-6)), axis=1))
+            s = e_mj * l_ms * a / acc_prod
+        else:
+            raise ValueError(self.kind)
+        bad = (~m.feasible) | (m.area > self.area_constraint)
+        return jnp.where(bad, _BIG, s)
+
+
+def per_workload_scores(m: CostMetrics, kind: str = "edap") -> jnp.ndarray:
+    """(P, W) per-workload scores of each design (for Figs. 3/5/10:
+    evaluate a chosen design on each workload separately)."""
+    e_mj = m.energy * 1e3
+    l_ms = m.latency * 1e3
+    a = m.area[:, None]
+    if kind == "edap":
+        return e_mj * l_ms * a
+    if kind == "edp":
+        return e_mj * l_ms
+    if kind == "energy":
+        return e_mj
+    if kind == "delay":
+        return l_ms
+    if kind == "area":
+        return jnp.broadcast_to(a, e_mj.shape)
+    raise ValueError(kind)

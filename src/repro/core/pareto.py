@@ -1,0 +1,30 @@
+"""Technology-cost trade-off analysis (paper §IV-I, Fig. 9, Table 7)."""
+from __future__ import annotations
+
+from typing import List, Sequence, Tuple
+
+import numpy as np
+
+
+def pareto_front(points: np.ndarray) -> np.ndarray:
+    """Indices of the non-dominated (minimize-all) points of (N, D)."""
+    pts = np.asarray(points, dtype=np.float64)
+    n = pts.shape[0]
+    keep = np.ones(n, bool)
+    for i in range(n):
+        if not keep[i]:
+            continue
+        dominated = np.all(pts <= pts[i], axis=1) & np.any(pts < pts[i], axis=1)
+        if np.any(dominated & keep):
+            keep[i] = False
+    return np.nonzero(keep)[0]
+
+
+def edap_cost_front(edap: np.ndarray, cost: np.ndarray,
+                    ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Pareto front over (EDAP, fabrication cost); returns (idx, edap, cost)
+    sorted by cost, mirroring Fig. 9's front construction."""
+    idx = pareto_front(np.stack([edap, cost], axis=1))
+    order = np.argsort(cost[idx])
+    idx = idx[order]
+    return idx, edap[idx], cost[idx]

@@ -1,0 +1,91 @@
+"""Hamming-distance-based initial sampling (paper §III-C2, Eqs. 1-2).
+
+Three steps, exactly as the paper:
+  1. randomly sample P_H candidate genomes from the space (RRAM: reject
+     designs that cannot hold the largest workload);
+  2. greedily select the P_E most mutually distant candidates under
+     Hamming distance (max-min greedy, seeded with the first candidate);
+  3. evaluate those and keep the best P_GA as the GA's initial
+     population (done by the caller / genetic.py).
+
+The greedy max-min selection runs on-device with lax.fori_loop:
+maintain d_min(X, C2) for every candidate and add argmax(d_min) each
+iteration — O(P_E · P_H · n_params).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .search_space import SearchSpace
+
+
+def random_genomes(key: jax.Array, space: SearchSpace, n: int) -> jax.Array:
+    """Uniform random genomes: (n, n_params) int32 of value indices."""
+    cards = jnp.asarray(space.cardinalities)
+    u = jax.random.uniform(key, (n, space.n_params))
+    return jnp.floor(u * cards[None, :]).astype(jnp.int32)
+
+
+def hamming_select(candidates: jax.Array, n_select: int) -> jax.Array:
+    """Greedy max-min Hamming-distance subset selection.
+
+    candidates: (P_H, n) int32. Returns (n_select, n) int32.
+    """
+    P_H = candidates.shape[0]
+    n_select = min(n_select, P_H)
+
+    def dist_to(idx):
+        return jnp.sum(candidates != candidates[idx][None, :], axis=1)
+
+    selected = jnp.zeros((n_select,), jnp.int32)
+    d_min = dist_to(0)
+    # first candidate seeds the set (paper: C2 = {c_1-1})
+    taken = jnp.zeros((P_H,), bool).at[0].set(True)
+
+    def body(i, state):
+        selected, d_min, taken = state
+        masked = jnp.where(taken, -1, d_min)
+        nxt = jnp.argmax(masked).astype(jnp.int32)
+        selected = selected.at[i].set(nxt)
+        d_min = jnp.minimum(d_min, dist_to(nxt))
+        taken = taken.at[nxt].set(True)
+        return selected, d_min, taken
+
+    selected, _, _ = jax.lax.fori_loop(1, n_select, body,
+                                       (selected, d_min, taken))
+    return candidates[selected]
+
+
+def sample_initial(key: jax.Array, space: SearchSpace, p_h: int, p_e: int,
+                   capacity_filter=None, max_tries: int = 20) -> jax.Array:
+    """P_H random (feasibility-filtered) -> P_E Hamming-diverse genomes.
+
+    capacity_filter: optional fn(genomes (N, n)) -> (N,) bool keeping
+    designs that can hold the largest workload (RRAM weight-stationary
+    case in Algorithm 1).
+    """
+    if capacity_filter is None:
+        cands = random_genomes(key, space, p_h)
+    else:
+        pool = []
+        total = 0
+        for t in range(max_tries):
+            key, k = jax.random.split(key)
+            g = random_genomes(k, space, p_h)
+            keep = np.asarray(capacity_filter(g))
+            g = np.asarray(g)[keep]
+            pool.append(g)
+            total += g.shape[0]
+            if total >= p_h:
+                break
+        cands = jnp.asarray(np.concatenate(pool, axis=0))
+        if cands.shape[0] < 2:
+            raise RuntimeError(
+                "capacity filter rejected (almost) all sampled designs — "
+                "the largest workload does not fit anywhere in this space")
+        cands = cands[:p_h]
+    return hamming_select(cands, p_e)

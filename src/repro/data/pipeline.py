@@ -1,0 +1,103 @@
+"""Deterministic synthetic token pipeline.
+
+Stateless-by-step generation: batch(step) is a pure function of
+(seed, step, shard), so resume-after-crash is bit-exact (the checkpoint
+only needs the step counter — train/loop.py calls ``seek``), and every
+host generates exactly its own shard without coordination (the standard
+per-host data-parallel input pattern at pod scale).
+
+Token stream: a Zipfian unigram mixture with Markov bigram structure so
+the LM loss actually decreases (pure uniform noise would pin CE at
+log V). Labels = next token (the loss shifts internally).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+from ..models import ArchConfig
+
+
+class SyntheticTokenPipeline:
+    def __init__(self, cfg: ArchConfig, global_batch: int, seq_len: int,
+                 seed: int = 0, process_index: Optional[int] = None,
+                 process_count: Optional[int] = None):
+        self.cfg = cfg
+        self.global_batch = global_batch
+        self.seq_len = seq_len
+        self.seed = seed
+        self.pi = (jax.process_index() if process_index is None
+                   else process_index)
+        self.pc = (jax.process_count() if process_count is None
+                   else process_count)
+        assert global_batch % self.pc == 0
+        self.local_batch = global_batch // self.pc
+        self.step = 0
+        v = cfg.vocab_size
+        rng = np.random.default_rng(seed)
+        # fixed Markov structure shared by all hosts
+        ranks = np.arange(1, v + 1, dtype=np.float64)
+        self._unigram = (1.0 / ranks) / np.sum(1.0 / ranks)
+        self._succ = rng.integers(0, v, size=(v, 4))  # 4 likely successors
+
+    def state(self) -> Dict[str, int]:
+        return {"step": self.step}
+
+    def seek(self, step: int) -> None:
+        self.step = step
+
+    def _tokens(self, step: int) -> np.ndarray:
+        v = self.cfg.vocab_size
+        rng = np.random.default_rng(
+            (self.seed * 1_000_003 + step) * 4096 + self.pi)
+        B, S = self.local_batch, self.seq_len
+        toks = np.empty((B, S), np.int32)
+        toks[:, 0] = rng.choice(v, size=B, p=self._unigram)
+        follow = rng.random((B, S)) < 0.75
+        succ_pick = rng.integers(0, 4, size=(B, S))
+        fresh = rng.choice(v, size=(B, S), p=self._unigram)
+        for t in range(1, S):
+            nxt = self._succ[toks[:, t - 1], succ_pick[:, t]]
+            toks[:, t] = np.where(follow[:, t], nxt, fresh[:, t])
+        return toks
+
+    def next_batch(self) -> Dict[str, np.ndarray]:
+        toks = self._tokens(self.step)
+        self.step += 1
+        batch = {"tokens": toks, "labels": toks.copy()}
+        cfg = self.cfg
+        if cfg.frontend == "audio":
+            rng = np.random.default_rng(self.seed + self.step)
+            batch = {
+                "frames": rng.standard_normal(
+                    (self.local_batch, self.seq_len, cfg.frontend_dim)
+                ).astype(np.float32),
+                "labels": toks,
+            }
+        if cfg.frontend == "vision":
+            rng = np.random.default_rng(self.seed + self.step)
+            batch["image_embeds"] = rng.standard_normal(
+                (self.local_batch, cfg.n_img_tokens, cfg.d_vision)
+            ).astype(np.float32)
+        return batch
+
+
+def make_batch_specs(cfg: ArchConfig, global_batch: int, seq_len: int,
+                     dtype=None) -> Dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStruct stand-ins for one global batch (dry-run input)."""
+    import jax.numpy as jnp
+    dt = dtype or cfg.jnp_dtype
+    specs = {}
+    if cfg.frontend == "audio":
+        specs["frames"] = jax.ShapeDtypeStruct(
+            (global_batch, seq_len, cfg.frontend_dim), dt)
+    else:
+        specs["tokens"] = jax.ShapeDtypeStruct(
+            (global_batch, seq_len), jnp.int32)
+    specs["labels"] = jax.ShapeDtypeStruct((global_batch, seq_len), jnp.int32)
+    if cfg.frontend == "vision":
+        specs["image_embeds"] = jax.ShapeDtypeStruct(
+            (global_batch, cfg.n_img_tokens, cfg.d_vision), dt)
+    return specs

@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for the perf-critical compute layers:
+
+- imc_matmul: bit-serial IMC crossbar GEMM simulation (paper §IV-H's
+  hot spot, TPU-adapted — see DESIGN.md §3)
+- flash_attention: blockwise causal/windowed attention for the LM stack
+
+Validated in interpret mode against the pure-jnp oracles in ref.py.
+"""
+from .ops import flash_mha, imc_gemm
+from . import ref

@@ -1,0 +1,109 @@
+"""Pallas TPU kernel: blockwise (flash) causal attention.
+
+Mirrors models/attention.py:blockwise_attention (the jnp oracle is
+kernels/ref.py:attention_ref). Grid (B*H, S/bq, T/bk) with the KV dim
+innermost; running max / denominator / accumulator live in VMEM scratch
+across KV iterations, the output block is written at the last KV step.
+Fully-masked (future) KV blocks short-circuit via pl.when — the causal
+upper triangle costs no MXU work.
+
+Block sizes default to 128/256 (MXU-aligned, (bq+2*bk)*hd*4B + bq*bk*4B
+well under the ~16 MB VMEM budget for hd<=256).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1.0e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  causal: bool, window: int, block_q: int, block_k: int,
+                  n_k: int, seq_len_k: int, scale: float):
+    qi = pl.program_id(1)
+    kj = pl.program_id(2)
+
+    @pl.when(kj == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_pos = qi * block_q + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 0)
+    k_pos = kj * block_k + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 1)
+
+    def compute():
+        q = q_ref[0].astype(jnp.float32) * scale      # (bq, hd)
+        k = k_ref[0].astype(jnp.float32)              # (bk, hd)
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        mask = k_pos < seq_len_k
+        if causal:
+            mask &= q_pos >= k_pos
+        if window > 0:
+            mask &= (q_pos - k_pos) < window
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev, l_prev = m_scr[...], l_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_prev * corr + jnp.sum(p, axis=1, keepdims=True)
+        m_scr[...] = m_new
+        acc_scr[...] = acc_scr[...] * corr + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+    if causal:
+        # skip blocks entirely above the diagonal
+        first_q = qi * block_q
+        first_k = kj * block_k
+        pl.when(first_q >= first_k)(compute)
+    else:
+        compute()
+
+    @pl.when(kj == n_k - 1)
+    def _flush():
+        o_ref[0] = (acc_scr[...] /
+                    jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: int = 0,
+                    block_q: int = 128, block_k: int = 256,
+                    interpret: bool = False) -> jax.Array:
+    """q: (BH, S, hd); k, v: (BH, T, hd). Returns (BH, S, hd).
+    S % block_q == 0 and T % block_k == 0 (ops.py pads & unpads)."""
+    BH, S, hd = q.shape
+    T = k.shape[1]
+    bq, bk = min(block_q, S), min(block_k, T)
+    assert S % bq == 0 and T % bk == 0
+    grid = (BH, S // bq, T // bk)
+    kernel = functools.partial(
+        _flash_kernel, causal=causal, window=window, block_q=bq,
+        block_k=bk, n_k=T // bk, seq_len_k=T,
+        scale=1.0 / float(hd) ** 0.5)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, hd), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bk, hd), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bk, hd), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, hd), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, S, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),   # running max m
+            pltpu.VMEM((bq, 1), jnp.float32),   # running denom l
+            pltpu.VMEM((bq, hd), jnp.float32),  # output accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v)

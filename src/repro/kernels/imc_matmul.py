@@ -1,0 +1,82 @@
+"""Pallas TPU kernel: bit-serial IMC crossbar GEMM simulation.
+
+The paper's §IV-H evaluates workloads through noisy crossbars: 1-bit
+activation streams, R-row crossbar tiles, one ADC per macro. The TPU
+adaptation (DESIGN.md §3): each (K-tile = Xbar_rows) partial product is
+an MXU matmul of one activation *bit-plane* against the (pre-noised)
+weight tile, followed by ADC quantization of the analog column sum, and
+a shift-accumulate over the 8 bit positions — i.e. the crossbar's
+bit-serial dataflow mapped onto MXU tiles instead of analog columns.
+
+Grid: (M/bm, N/bn, K/R) with the K dim innermost; the f32 output block
+is zeroed at k==0 and accumulated across K tiles — the digital
+equivalent of summing per-crossbar ADC outputs. Block shapes keep the
+working set in VMEM: x (bm, R) int8-as-int32, w (R, bn) f32,
+out (bm, bn) f32, with bm/bn multiples of 128 for MXU alignment and R =
+Xbar_rows (128..512, already 128-aligned).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+WEIGHT_BITS = 8
+
+
+def _imc_kernel(x_ref, w_ref, o_ref, *, adc_bits: int, xbar_rows: int,
+                w_scale: float):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...].astype(jnp.int32)          # (bm, R) unsigned 8-bit acts
+    w = w_ref[...].astype(jnp.float32)        # (R, bn) pre-noised weights
+
+    # ADC full scale: R rows of 1-bit activations against |w|<=w_scale,
+    # with the ref model's rows/4 typical-occupancy scaling.
+    full_scale = w_scale * xbar_rows / 4.0
+    delta = full_scale / (2.0 ** (adc_bits - 1))
+    lo = -(2.0 ** (adc_bits - 1))
+    hi = 2.0 ** (adc_bits - 1) - 1.0
+
+    acc = jnp.zeros_like(o_ref)
+    for b in range(WEIGHT_BITS):
+        bit = ((x >> b) & 1).astype(jnp.float32)
+        partial = jax.lax.dot_general(
+            bit, w, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        q = jnp.clip(jnp.round(partial / delta), lo, hi) * delta  # ADC
+        acc = acc + q * (2.0 ** b)
+    o_ref[...] += acc
+
+
+def imc_matmul(x_q: jax.Array, w: jax.Array, *, xbar_rows: int = 256,
+               adc_bits: int = 8, block_m: int = 128, block_n: int = 128,
+               w_scale: float = 1.0, interpret: bool = False) -> jax.Array:
+    """x_q: (M, K) int32 in [0, 255] (8-bit activations); w: (K, N) f32
+    conductance-mapped weights. Returns (M, N) f32. K must be a multiple
+    of xbar_rows; pad upstream (kernels/ops.py does)."""
+    M, K = x_q.shape
+    K2, N = w.shape
+    assert K == K2 and K % xbar_rows == 0
+    bm, bn = min(block_m, M), min(block_n, N)
+    assert M % bm == 0 and N % bn == 0
+    grid = (M // bm, N // bn, K // xbar_rows)
+    kernel = functools.partial(_imc_kernel, adc_bits=adc_bits,
+                               xbar_rows=xbar_rows, w_scale=w_scale)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, xbar_rows), lambda i, j, k: (i, k)),
+            pl.BlockSpec((xbar_rows, bn), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), jnp.float32),
+        interpret=interpret,
+    )(x_q, w)

@@ -1,0 +1,65 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+On CPU (this container) the kernels execute with interpret=True — the
+kernel body runs in Python for correctness validation; on TPU they
+compile to Mosaic. Padding to block multiples happens here so callers
+see arbitrary shapes.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .flash_attention import flash_attention
+from .imc_matmul import imc_matmul
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+@functools.partial(jax.jit, static_argnames=("xbar_rows", "adc_bits",
+                                             "w_scale"))
+def imc_gemm(x_q: jax.Array, w: jax.Array, xbar_rows: int = 256,
+             adc_bits: int = 8, w_scale: float = 1.0) -> jax.Array:
+    """Padded/aligned entry point. x_q: (M, K) int32 [0,255]; w: (K, N)."""
+    M, K = x_q.shape
+    N = w.shape[1]
+    bm = 128 if M >= 128 else 8
+    bn = 128 if N >= 128 else 128
+    pad_m = (-M) % bm
+    pad_k = (-K) % xbar_rows
+    pad_n = (-N) % bn
+    xp = jnp.pad(x_q, ((0, pad_m), (0, pad_k)))
+    wp = jnp.pad(w, ((0, pad_k), (0, pad_n)))
+    out = imc_matmul(xp, wp, xbar_rows=xbar_rows, adc_bits=adc_bits,
+                     block_m=bm, block_n=bn, w_scale=w_scale,
+                     interpret=_on_cpu())
+    return out[:M, :N]
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window",
+                                             "block_q", "block_k"))
+def flash_mha(q: jax.Array, k: jax.Array, v: jax.Array,
+              causal: bool = True, window: int = 0,
+              block_q: int = 128, block_k: int = 128) -> jax.Array:
+    """(B, S, H, hd) x (B, T, H, hd)^2 -> (B, S, H, hd). GQA should be
+    expanded by the caller (models/attention.py:_expand_kv)."""
+    B, S, H, hd = q.shape
+    T = k.shape[1]
+    bq = min(block_q, max(8, S))
+    bk = min(block_k, max(8, T))
+    pad_q = (-S) % bq
+    pad_k = (-T) % bk
+    qf = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+    kf = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    vf = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    fold = lambda x: x.transpose(0, 2, 1, 3).reshape(
+        B * H, x.shape[1], hd)
+    out = flash_attention(fold(qf), fold(kf), fold(vf), causal=causal,
+                          window=window, block_q=bq, block_k=bk,
+                          interpret=_on_cpu())
+    out = out.reshape(B, H, S + pad_q, hd).transpose(0, 2, 1, 3)
+    return out[:, :S]

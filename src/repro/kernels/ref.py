@@ -1,0 +1,52 @@
+"""Pure-jnp oracles for the Pallas kernels (allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+WEIGHT_BITS = 8
+
+
+def imc_matmul_ref(x_q: jax.Array, w: jax.Array, *, xbar_rows: int = 256,
+                   adc_bits: int = 8, w_scale: float = 1.0) -> jax.Array:
+    """Bit-serial crossbar GEMM oracle. x_q: (M, K) int32 in [0, 255];
+    w: (K, N) f32. Per (K-tile, bit-plane) partial sums are
+    ADC-quantized then shift-accumulated — same math as the kernel."""
+    M, K = x_q.shape
+    N = w.shape[1]
+    assert K % xbar_rows == 0
+    n_tiles = K // xbar_rows
+    xt = x_q.reshape(M, n_tiles, xbar_rows)
+    wt = w.reshape(n_tiles, xbar_rows, N)
+
+    full_scale = w_scale * xbar_rows / 4.0
+    delta = full_scale / (2.0 ** (adc_bits - 1))
+    lo = -(2.0 ** (adc_bits - 1))
+    hi = 2.0 ** (adc_bits - 1) - 1.0
+
+    out = jnp.zeros((M, N), jnp.float32)
+    for b in range(WEIGHT_BITS):
+        bit = ((xt >> b) & 1).astype(jnp.float32)
+        partial = jnp.einsum("mtk,tkn->mtn", bit, wt.astype(jnp.float32))
+        q = jnp.clip(jnp.round(partial / delta), lo, hi) * delta
+        out = out + jnp.sum(q, axis=1) * (2.0 ** b)
+    return out
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  causal: bool = True, window: int = 0) -> jax.Array:
+    """Plain softmax attention oracle. q: (BH, S, hd); k, v: (BH, T, hd)."""
+    S, T = q.shape[1], k.shape[1]
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / jnp.sqrt(jnp.float32(q.shape[-1]))
+    q_pos = jnp.arange(S)[:, None]
+    k_pos = jnp.arange(T)[None, :]
+    mask = jnp.ones((S, T), bool)
+    if causal:
+        mask &= q_pos >= k_pos
+    if window > 0:
+        mask &= (q_pos - k_pos) < window
+    s = jnp.where(mask[None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p,
+                      v.astype(jnp.float32)).astype(q.dtype)

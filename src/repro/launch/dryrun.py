@@ -1,0 +1,384 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+The two lines above run before ANY other import (jax locks device count
+at first init). 512 placeholder host devices back the production mesh;
+nothing is allocated — inputs are ShapeDtypeStructs, and the artifact is
+``lowered.compile()`` plus its memory/cost analyses.
+
+Usage:
+  python -m repro.launch.dryrun --all [--multi-pod] [--out DIR]
+  python -m repro.launch.dryrun --arch mixtral_8x22b --shape train_4k
+  python -m repro.launch.dryrun --arch imc_search            # paper cell
+
+Outputs one JSON per cell under --out (default experiments/dryrun/):
+flops, bytes, per-collective bytes, memory analysis, wall compile time.
+"""
+import argparse
+import json
+import re
+import time
+import traceback
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..configs import ARCH_IDS, SHAPES, cell_runnable, get_config
+from ..data.pipeline import make_batch_specs
+from ..models import ArchConfig
+from ..models.transformer import (decode_step, forward, init_cache,
+                                  init_params, prefill)
+from ..parallel.sharding import (batch_partition_spec, cache_specs,
+                                 shardings_from_specs, zero1_specs)
+from ..train.loop import init_train_state, make_train_step
+from ..train.optimizer import adamw_init
+from .mesh import make_production_mesh
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+_DTYPE_BYTES = {"f64": 8, "s64": 8, "u64": 8, "c64": 8, "f32": 4, "s32": 4,
+                "u32": 4, "bf16": 2, "f16": 2, "s16": 2, "u16": 2,
+                "s8": 1, "u8": 1, "pred": 1, "f8e4m3": 1, "f8e5m2": 1}
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(")
+_WHILE_RE = re.compile(
+    r"while\(.*?\), condition=%?([\w.\-]+), body=%?([\w.\-]+)")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+
+
+def _split_computations(hlo_text: str) -> Dict[str, list]:
+    """{computation_name: [lines]} from optimized HLO text."""
+    comps: Dict[str, list] = {}
+    cur = None
+    for line in hlo_text.splitlines():
+        if not line.startswith(" "):
+            m = _COMP_HDR.match(line.strip())
+            if m and line.rstrip().endswith("{"):
+                cur = m.group(1)
+                comps[cur] = []
+                continue
+        if cur is not None:
+            comps.setdefault(cur, []).append(line)
+    return comps
+
+
+def _line_result_bytes(line: str, op_kw: str) -> float:
+    lhs = line.split(f" {op_kw}", 1)[0]
+    if "=" not in lhs:
+        return 0.0
+    total = 0.0
+    for dt, dims in _SHAPE_RE.findall(lhs.split("=", 1)[1]):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Per-collective result bytes from optimized HLO, with while-loop
+    bodies multiplied by their trip count (XLA's flat text lists a loop
+    body once; collectives inside a scanned layer stack run trip-count
+    times). Trip count = largest constant in the loop condition."""
+    comps = _split_computations(hlo_text)
+
+    # trip-count multiplier per computation (fixed point for nesting)
+    mult = {name: 1.0 for name in comps}
+    loops = []  # (parent_comp, cond_name, body_name)
+    for name, lines in comps.items():
+        for line in lines:
+            m = _WHILE_RE.search(line)
+            if m:
+                loops.append((name, m.group(1), m.group(2)))
+    for _ in range(4):  # fixed-point over nesting depth
+        for parent, cond, body in loops:
+            consts = [int(c) for ls in (comps.get(cond, ()),)
+                      for l in ls for c in _CONST_RE.findall(l)]
+            trip = max(consts) if consts else 1
+            if body in mult:
+                mult[body] = mult.get(parent, 1.0) * trip
+
+    out = {c: 0.0 for c in COLLECTIVES}
+    for name, lines in comps.items():
+        for line in lines:
+            for coll in COLLECTIVES:
+                if f" {coll}(" in line or f" {coll}-start(" in line:
+                    out[coll] += (_line_result_bytes(line, coll)
+                                  * mult.get(name, 1.0))
+                    break
+    return out
+
+
+def _mem_dict(compiled) -> Dict[str, float]:
+    try:
+        ma = compiled.memory_analysis()
+    except Exception:
+        return {}
+    keys = ("argument_size_in_bytes", "output_size_in_bytes",
+            "temp_size_in_bytes", "alias_size_in_bytes",
+            "generated_code_size_in_bytes")
+    return {k: float(getattr(ma, k)) for k in keys if hasattr(ma, k)}
+
+
+def _cost_dict(compiled) -> Dict[str, float]:
+    try:
+        ca = compiled.cost_analysis()
+    except Exception:
+        return {}
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return {k: float(v) for k, v in dict(ca).items()
+            if isinstance(v, (int, float)) and np.isfinite(float(v))}
+
+
+def _abstract_params(cfg: ArchConfig, n_shards: int):
+    """(param ShapeDtypeStruct tree, spec tree) without allocating."""
+    box = {}
+
+    def build(key):
+        p, s = init_params(key, cfg, n_shards)
+        box["specs"] = s
+        return p
+
+    shapes = jax.eval_shape(build, jax.random.PRNGKey(0))
+    return shapes, box["specs"]
+
+
+def lower_cell(cfg: ArchConfig, shape_name: str, mesh: Mesh,
+               kv_seq_axis=None, remat: bool = True, accum: int = 1,
+               seq_parallel: bool = False,
+               extra_flags: Dict[str, Any] | None = None):
+    """Returns (lowered, aux_info) for one (arch × shape) cell."""
+    shape = SHAPES[shape_name]
+    n_model = mesh.shape["model"]
+    p_shapes, p_specs = _abstract_params(cfg, n_model)
+    p_shard = shardings_from_specs(mesh, p_specs)
+    B, S = shape.global_batch, shape.seq_len
+
+    if shape.kind == "train":
+        batch_shapes = make_batch_specs(cfg, B, S)
+        b_shard = jax.tree.map(
+            lambda l: NamedSharding(
+                mesh, batch_partition_spec(mesh, l.shape[0], l.ndim - 1)),
+            batch_shapes)
+        opt_shapes = jax.eval_shape(adamw_init, p_shapes)
+        mv_specs = zero1_specs(p_specs, p_shapes, mesh)
+        mv_shard = shardings_from_specs(mesh, mv_specs)
+        state_shard = type(opt_shapes)(m=mv_shard, v=mv_shard,
+                                       count=NamedSharding(mesh, P()))
+        from ..train.loop import TrainState
+        state_shapes = TrainState(
+            params=p_shapes, opt=opt_shapes,
+            step=jax.ShapeDtypeStruct((), jnp.int32))
+        state_shardings = TrainState(params=p_shard, opt=state_shard,
+                                     step=NamedSharding(mesh, P()))
+        seq_spec = None
+        if seq_parallel:
+            from ..parallel.sharding import batch_axes
+            seq_spec = P(batch_axes(mesh), "model", None)
+        step_fn = make_train_step(cfg, remat=remat, accum=accum,
+                                  seq_spec=seq_spec)
+        fn = jax.jit(step_fn,
+                     in_shardings=(state_shardings, b_shard),
+                     out_shardings=(state_shardings, None))
+        with jax.set_mesh(mesh):
+            lowered = fn.lower(state_shapes, batch_shapes)
+        tokens = B * S
+        model_flops = 6.0 * cfg.active_param_count() * tokens
+    elif shape.kind == "prefill":
+        batch_shapes = make_batch_specs(cfg, B, S)
+        b_shard = jax.tree.map(
+            lambda l: NamedSharding(
+                mesh, batch_partition_spec(mesh, l.shape[0], l.ndim - 1)),
+            batch_shapes)
+        if cfg.is_decoder:
+            def pre(params, batch):
+                return prefill(params, cfg, batch, cache_len=S)
+            cache_shapes = jax.eval_shape(
+                lambda: init_cache(cfg, B, S))
+            c_shard = cache_specs(mesh, cache_shapes, B,
+                                  kv_seq_axis=kv_seq_axis)
+            logits_shard = NamedSharding(
+                mesh, batch_partition_spec(mesh, B, 1))
+            fn = jax.jit(pre, in_shardings=(p_shard, b_shard),
+                         out_shardings=(logits_shard, c_shard))
+        else:
+            def pre(params, batch):  # encoder forward (no decode exists)
+                logits, _, _ = forward(params, cfg, batch, mode="train",
+                                       remat=False)
+                return logits
+            fn = jax.jit(pre, in_shardings=(p_shard, b_shard),
+                         out_shardings=NamedSharding(
+                             mesh, batch_partition_spec(mesh, B, 2)))
+        lowered = fn.lower(p_shapes, batch_shapes)
+        model_flops = 2.0 * cfg.active_param_count() * B * S
+    else:  # decode
+        if (extra_flags or {}).get("kv_quant"):
+            import dataclasses as _dc
+            cfg = _dc.replace(cfg, kv_quant=True)
+        cache_len = S
+        cache_shapes = jax.eval_shape(lambda: init_cache(cfg, B, cache_len))
+        cache_mode = (extra_flags or {}).get("cache_sharding", "auto")
+        if cache_mode == "auto":
+            # Let GSPMD pick the cache layout and KEEP it across steps
+            # (in == out == unconstrained). The steady-state serving loop
+            # feeds the cache straight back, so whatever head/batch split
+            # the partitioner chooses inside the loop never reshards.
+            # (§Perf iteration 3 — the batch-only constraint forced a
+            # full f32 cache all-gather per step.)
+            c_in, c_out = None, None
+        else:
+            c_shard = cache_specs(mesh, cache_shapes, B,
+                                  kv_seq_axis=kv_seq_axis)
+            c_in = c_out = c_shard
+        tok = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+        pos = jax.ShapeDtypeStruct((B,), jnp.int32)
+        tok_shard = NamedSharding(mesh, batch_partition_spec(mesh, B, 1))
+        pos_shard = NamedSharding(mesh, batch_partition_spec(mesh, B, 0))
+
+        def dec(params, token, cache, position):
+            return decode_step(params, cfg, token, cache, position)
+
+        fn = jax.jit(dec,
+                     in_shardings=(p_shard, tok_shard, c_in, pos_shard),
+                     out_shardings=(NamedSharding(
+                         mesh, batch_partition_spec(mesh, B, 1)), c_out))
+        lowered = fn.lower(p_shapes, tok, cache_shapes, pos)
+        model_flops = 2.0 * cfg.active_param_count() * B
+    return lowered, {"model_flops": model_flops}
+
+
+def lower_imc_search(mesh: Mesh, population: int = 8192):
+    """The paper's own technique as a dry-run cell: mesh-sharded
+    population evaluation of the IMC cost model (core/distributed.py)."""
+    from ..core import (Objective, get_space, pack, get_workload_set,
+                        PAPER_4)
+    from ..core.distributed import make_sharded_scorer
+    space = get_space("rram")
+    wl = pack(get_workload_set(PAPER_4))
+    scorer = make_sharded_scorer(space, wl, Objective("edap", "max"), mesh)
+    g = jax.ShapeDtypeStruct((population, space.n_params), jnp.int32)
+    lowered = scorer.lowerable.lower(g)
+    # model flops ~ the cost model's tensor algebra; tiny — report 0
+    return lowered, {"model_flops": 0.0}
+
+
+def run_cell(arch: str, shape_name: str, mesh: Mesh, mesh_name: str,
+             out_dir: str, kv_seq_axis=None, remat: bool = True,
+             tag: str = "", cache_sharding: str = "auto",
+             accum: int = 1, seq_parallel: bool = False,
+             kv_quant: bool = False) -> Dict[str, Any]:
+    t0 = time.perf_counter()
+    if arch == "imc_search":
+        lowered, aux = lower_imc_search(mesh)
+    else:
+        cfg = get_config(arch)
+        lowered, aux = lower_cell(cfg, shape_name, mesh,
+                                  kv_seq_axis=kv_seq_axis, remat=remat,
+                                  accum=accum, seq_parallel=seq_parallel,
+                                  extra_flags={"cache_sharding":
+                                               cache_sharding,
+                                               "kv_quant": kv_quant})
+    t_lower = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    compiled = lowered.compile()
+    t_compile = time.perf_counter() - t0
+    hlo = compiled.as_text()
+    coll = collective_bytes(hlo)
+    rec = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name, "tag": tag,
+        "n_devices": int(np.prod(list(mesh.shape.values()))),
+        "lower_s": t_lower, "compile_s": t_compile,
+        "cost": _cost_dict(compiled), "memory": _mem_dict(compiled),
+        "collective_bytes": coll,
+        "collective_total": float(sum(coll.values())),
+        "model_flops": aux["model_flops"],
+    }
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        fname = f"{arch}__{shape_name}__{mesh_name}"
+        if tag:
+            fname += f"__{tag}"
+        with open(os.path.join(out_dir, fname + ".json"), "w") as f:
+            json.dump(rec, f, indent=1)
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--kv-seq-axis", default=None)
+    ap.add_argument("--cache-sharding", default="auto",
+                    choices=["auto", "batch"])
+    ap.add_argument("--no-remat", action="store_true")
+    ap.add_argument("--accum", type=int, default=1)
+    ap.add_argument("--seq-parallel", action="store_true")
+    ap.add_argument("--kv-quant", action="store_true")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args()
+
+    meshes = []
+    if args.both_meshes or not args.multi_pod:
+        meshes.append(("pod256", make_production_mesh(multi_pod=False)))
+    if args.both_meshes or args.multi_pod:
+        meshes.append(("pods2x256", make_production_mesh(multi_pod=True)))
+
+    cells = []
+    if args.all:
+        for a in ARCH_IDS:
+            cfg = get_config(a)
+            for s, spec in SHAPES.items():
+                ok, why = cell_runnable(cfg, spec)
+                if ok:
+                    cells.append((a, s))
+                else:
+                    print(f"SKIP {a} x {s}: {why}")
+        cells.append(("imc_search", "population"))
+    else:
+        assert args.arch
+        cells.append((args.arch,
+                      args.shape or ("population" if args.arch ==
+                                     "imc_search" else "train_4k")))
+
+    failures = 0
+    for mesh_name, mesh in meshes:
+        for arch, shape in cells:
+            label = f"{arch} x {shape} on {mesh_name}"
+            try:
+                rec = run_cell(arch, shape, mesh, mesh_name, args.out,
+                               kv_seq_axis=args.kv_seq_axis,
+                               remat=not args.no_remat, tag=args.tag,
+                               cache_sharding=args.cache_sharding,
+                               accum=args.accum,
+                               seq_parallel=args.seq_parallel,
+                               kv_quant=args.kv_quant)
+                c = rec["cost"]
+                print(f"OK   {label}: compile {rec['compile_s']:.1f}s "
+                      f"flops {c.get('flops', float('nan')):.3e} "
+                      f"coll {rec['collective_total']:.3e}B")
+            except Exception:
+                failures += 1
+                print(f"FAIL {label}")
+                traceback.print_exc()
+    if failures:
+        raise SystemExit(f"{failures} cells failed")
+    print("dry-run complete: all cells compiled")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,28 @@
+"""Production mesh construction.
+
+Axes: ("pod", "data", "model"). Single pod = 256 chips (16 x 16);
+multi-pod = 2 pods = 512 chips. A FUNCTION (not module-level constant)
+so importing never touches jax device state.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh
+
+
+def _auto(n: int):
+    return (jax.sharding.AxisType.Auto,) * n
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+
+
+def make_host_mesh(model: int = 1) -> Mesh:
+    """Small mesh over whatever devices exist (tests / CPU smoke)."""
+    n = len(jax.devices())
+    assert n % model == 0
+    return jax.make_mesh((n // model, model), ("data", "model"),
+                         axis_types=_auto(2))

@@ -1,0 +1,102 @@
+"""Run the paper's joint hardware-workload co-optimization.
+
+Usage:
+  python -m repro.launch.search --mem rram --objective edap --agg max \
+      --workloads paper4 [--archs recurrentgemma_9b,qwen3_4b,...] \
+      [--algorithm fourphase|plain] [--generations 10] [--pga 40]
+
+Workload sets: paper4, paper9, archs (the assigned LM architectures via
+core.workloads.from_arch_config), or an explicit comma list.
+
+On a multi-device runtime the population evaluation shards over the
+mesh 'data' axis (core/distributed.py); on this 1-CPU container it runs
+locally jitted.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+import jax
+import numpy as np
+
+from ..configs import ARCH_IDS, get_config
+from ..core import (FOUR_PHASES, Objective, get_space, joint_search,
+                    make_evaluator, pack, plain_ga_search, PAPER_4, PAPER_9,
+                    get_workload_set, from_arch_config)
+
+
+def build_workloads(spec: str, seq: int = 512):
+    if spec == "paper4":
+        return get_workload_set(PAPER_4)
+    if spec == "paper9":
+        return get_workload_set(PAPER_9)
+    if spec == "archs":
+        return [from_arch_config(get_config(a), seq=seq) for a in ARCH_IDS]
+    names = spec.split(",")
+    if all(n in ARCH_IDS for n in names):
+        return [from_arch_config(get_config(n), seq=seq) for n in names]
+    return get_workload_set(names)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mem", default="rram", choices=["rram", "sram"])
+    ap.add_argument("--objective", default="edap")
+    ap.add_argument("--agg", default="max", choices=["max", "mean", "all"])
+    ap.add_argument("--workloads", default="paper4")
+    ap.add_argument("--algorithm", default="fourphase",
+                    choices=["fourphase", "plain"])
+    ap.add_argument("--tech-variable", action="store_true")
+    ap.add_argument("--generations", type=int, default=10)
+    ap.add_argument("--pga", type=int, default=40)
+    ap.add_argument("--ph", type=int, default=1000)
+    ap.add_argument("--pe", type=int, default=500)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    space = get_space(args.mem, args.tech_variable)
+    wls = build_workloads(args.workloads)
+    wa = pack(wls)
+    ev = make_evaluator(space, wa)
+    obj = Objective(args.objective, args.agg)
+
+    def score_fn(g):
+        return obj(ev(g))
+
+    cap_filter = None
+    if args.mem == "rram":
+        cap_filter = lambda g: np.asarray(ev(jax.numpy.asarray(g)).feasible)
+
+    key = jax.random.PRNGKey(args.seed)
+    if args.algorithm == "fourphase":
+        res = joint_search(key, space, score_fn, p_h=args.ph, p_e=args.pe,
+                           p_ga=args.pga,
+                           generations_per_phase=args.generations,
+                           capacity_filter=cap_filter)
+    else:
+        res = plain_ga_search(key, space, score_fn, p_ga=args.pga,
+                              total_generations=4 * args.generations,
+                              capacity_filter=cap_filter)
+
+    m = ev(jax.numpy.asarray(res.best_genome[None]))
+    report = {
+        "workloads": [w.name for w in wls],
+        "mem": args.mem, "objective": args.objective, "agg": args.agg,
+        "best_score": float(res.best_score),
+        "best_design": space.decode(res.best_genome),
+        "per_workload_energy_mJ": (np.asarray(m.energy[0]) * 1e3).tolist(),
+        "per_workload_latency_ms": (np.asarray(m.latency[0]) * 1e3).tolist(),
+        "area_mm2": float(m.area[0]),
+        "wall_time_s": res.wall_time_s,
+        "sampling_time_s": res.sampling_time_s,
+    }
+    print(json.dumps(report, indent=1))
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(report, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

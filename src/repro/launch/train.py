@@ -1,0 +1,67 @@
+"""End-to-end training launcher.
+
+  python -m repro.launch.train --arch qwen3_4b --reduced --steps 200 \
+      --batch 8 --seq 128 --ckpt-dir /tmp/ckpt [--model-shards 1]
+
+On the production fleet the same entry point runs under
+``jax.distributed.initialize()`` with the (pod, data, model) mesh from
+launch/mesh.py; on this container it trains the reduced config on the
+host mesh. Fault tolerance: checkpoint/restore + bit-exact resume via
+train/loop.py (kill and rerun the same command to resume).
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs import get_config
+from ..data import SyntheticTokenPipeline
+from ..models import init_params
+from ..parallel.sharding import shardings_from_specs
+from ..train.loop import init_train_state, make_train_step, train_loop
+from .mesh import make_host_mesh
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3_4b")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--accum", type=int, default=1)
+    ap.add_argument("--model-shards", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, reduced=args.reduced)
+    mesh = make_host_mesh(model=args.model_shards)
+    print(f"arch={cfg.name} params~{cfg.param_count()/1e6:.1f}M "
+          f"mesh={dict(mesh.shape)}")
+
+    key = jax.random.PRNGKey(args.seed)
+    with jax.set_mesh(mesh):
+        params, specs = init_params(key, cfg,
+                                    n_shards=mesh.shape["model"])
+        shardings = shardings_from_specs(mesh, specs)
+        params = jax.tree.map(jax.device_put, params, shardings)
+        state = init_train_state(params)
+        step_fn = jax.jit(make_train_step(
+            cfg, peak_lr=args.lr, total_steps=args.steps,
+            warmup=max(args.steps // 20, 5), accum=args.accum))
+        pipe = SyntheticTokenPipeline(cfg, args.batch, args.seq,
+                                      seed=args.seed)
+        state = train_loop(state, step_fn, pipe, args.steps,
+                           ckpt_dir=args.ckpt_dir,
+                           ckpt_every=args.ckpt_every)
+    print(f"done at step {int(state.step)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,7 @@
+"""Pure-JAX LM stack used both as dry-run subject and as workload
+source for the IMC co-optimization."""
+from .config import ArchConfig
+from .transformer import (apply_block, decode_step, forward, init_cache,
+                          init_params, loss_fn, prefill)
+from .attention import blockwise_attention, decode_attention
+from . import layers, moe, recurrent

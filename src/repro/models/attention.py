@@ -1,0 +1,151 @@
+"""Attention: blockwise (flash-style) streaming softmax in pure JAX.
+
+``blockwise_attention`` is the single implementation used for training,
+prefill and encoder paths — O(S·chunk) memory instead of O(S²), which
+is what makes the 32k-prefill cells compile with sane memory. It is the
+jnp oracle mirrored by the Pallas kernel in kernels/flash_attention.py.
+
+Supports: causal / bidirectional, sliding-window (LongFormer-style band),
+GQA (n_kv_heads < n_heads). Decode paths use direct einsums against the
+KV cache (single query).
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1.0e30
+
+
+def _expand_kv(x: jax.Array, n_heads: int) -> jax.Array:
+    """(B, T, KV, hd) -> (B, T, H, hd) by repeating each KV head."""
+    kv = x.shape[2]
+    if kv == n_heads:
+        return x
+    return jnp.repeat(x, n_heads // kv, axis=2)
+
+
+def blockwise_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        causal: bool = True, window: int = 0,
+                        chunk_q: int = 512, chunk_k: int = 512,
+                        q_offset: int = 0) -> jax.Array:
+    """q: (B, S, H, hd); k, v: (B, T, KV, hd). Returns (B, S, H, hd).
+
+    window > 0 restricts key j to q_pos - window < j <= q_pos.
+    q_offset shifts query positions (prefill continuation).
+    """
+    B, S, H, hd = q.shape
+    T = k.shape[1]
+    cq, ck = min(chunk_q, S), min(chunk_k, T)
+    pad_q, pad_k = (-S) % cq, (-T) % ck
+    qp = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    kp = _expand_kv(kp, H)
+    vp = _expand_kv(vp, H)
+    nq, nk = qp.shape[1] // cq, kp.shape[1] // ck
+    scale = 1.0 / jnp.sqrt(jnp.float32(hd))
+
+    qs = qp.reshape(B, nq, cq, H, hd).transpose(1, 0, 2, 3, 4)
+    ks = kp.reshape(B, nk, ck, H, hd).transpose(1, 0, 2, 3, 4)
+    vs = vp.reshape(B, nk, ck, H, hd).transpose(1, 0, 2, 3, 4)
+
+    q_pos_in = jnp.arange(cq)
+    k_pos_in = jnp.arange(ck)
+
+    def q_chunk_body(_, qi_and_idx):
+        q_i, i = qi_and_idx
+        q_glob = i * cq + q_pos_in + q_offset            # (cq,)
+
+        def kv_chunk_body(carry, kj_and_idx):
+            m, l, acc = carry
+            k_j, v_j, j = kj_and_idx
+            k_glob = j * ck + k_pos_in                    # (ck,)
+            s = jnp.einsum("bqhd,bkhd->bhqk", q_i.astype(jnp.float32),
+                           k_j.astype(jnp.float32)) * scale
+            mask = jnp.ones((cq, ck), bool)
+            if causal:
+                mask &= q_glob[:, None] >= k_glob[None, :]
+            if window > 0:
+                mask &= (q_glob[:, None] - k_glob[None, :]) < window
+            mask &= (k_glob < T)[None, :]
+            s = jnp.where(mask[None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            acc_new = (acc * corr[..., None]
+                       + jnp.einsum("bhqk,bkhd->bhqd", p,
+                                    v_j.astype(jnp.float32)))
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, H, cq), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, H, cq), jnp.float32)
+        a0 = jnp.zeros((B, H, cq, hd), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_chunk_body, (m0, l0, a0), (ks, vs, jnp.arange(nk)))
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        return None, out.transpose(0, 2, 1, 3).astype(q.dtype)  # (B,cq,H,hd)
+
+    _, outs = jax.lax.scan(q_chunk_body, None, (qs, jnp.arange(nq)))
+    out = outs.transpose(1, 0, 2, 3, 4).reshape(B, nq * cq, H, hd)
+    return out[:, :S]
+
+
+def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     kv_positions: jax.Array, q_position: jax.Array,
+                     window: int = 0, k_scale=None, v_scale=None
+                     ) -> jax.Array:
+    """Single-step decode. q: (B, 1, H, hd); caches: (B, T, KV, hd);
+    kv_positions: (B, T) int32 (negative = empty slot); q_position: (B,).
+
+    GQA-native: the KV cache is NEVER head-expanded or dtype-converted —
+    q is reshaped to (B, 1, KV, G, hd) and contracted against the raw
+    cache with f32 accumulation. This keeps the (huge) cache local under
+    batch sharding; only the (tiny) q crosses the model axis. See
+    EXPERIMENTS.md §Perf iteration 2: the naive expand-then-f32 version
+    all-gathered the entire cache in f32 every step (77 GB/step at
+    qwen3-4b × decode_32k).
+    """
+    B, _, H, hd = q.shape
+    KV = k_cache.shape[2]
+    G = H // KV
+    qf = q.reshape(B, 1, KV, G, hd)
+    quant = k_scale is not None
+    kc = k_cache.astype(q.dtype) if quant else k_cache
+    s = jnp.einsum("bqkgd,bskd->bqkgs", qf, kc,
+                   preferred_element_type=jnp.float32)
+    if quant:
+        # per-(slot, kv-head) dequant scale folded into the scores
+        s = s * k_scale.transpose(0, 2, 1)[:, None, :, None, :]
+    s = s / jnp.sqrt(jnp.float32(hd))
+    valid = (kv_positions >= 0) & (kv_positions <= q_position[:, None])
+    if window > 0:
+        valid &= (q_position[:, None] - kv_positions) < window
+    s = jnp.where(valid[:, None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    if quant:
+        # fold the V dequant scale into the attention weights (exact)
+        p = p * v_scale.transpose(0, 2, 1)[:, None, :, None, :]
+        out = jnp.einsum("bqkgs,bskd->bqkgd", p.astype(q.dtype),
+                         v_cache.astype(q.dtype),
+                         preferred_element_type=jnp.float32)
+    else:
+        out = jnp.einsum("bqkgs,bskd->bqkgd", p.astype(v_cache.dtype),
+                         v_cache, preferred_element_type=jnp.float32)
+    return out.reshape(B, 1, H, hd).astype(q.dtype)
+
+
+def cross_attention(q: jax.Array, k: jax.Array, v: jax.Array) -> jax.Array:
+    """Full (non-causal) cross attention; kv from the modality frontend.
+    q: (B, S, H, hd); k, v: (B, T_src, KV, hd)."""
+    H, hd = q.shape[2], q.shape[3]
+    kc, vc = _expand_kv(k, H), _expand_kv(v, H)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                   kc.astype(jnp.float32)) / jnp.sqrt(jnp.float32(hd))
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p, vc.astype(jnp.float32))
+    return out.astype(q.dtype)

@@ -1,0 +1,115 @@
+"""Basic LM building blocks: norms, RoPE, MLPs, initializers.
+
+Everything is a pure function over explicit param pytrees; ``init_*``
+helpers return ``(params, specs)`` where ``specs`` mirrors the param
+tree with ``jax.sharding.PartitionSpec`` leaves (consumed by
+parallel/sharding.py and the dry-run).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+MODEL_AXIS = "model"
+
+
+def _shardable(dim: int, n_shards: int) -> bool:
+    return n_shards > 0 and dim % n_shards == 0
+
+
+def spec_for(shape: Tuple[int, ...], shard_dim: Optional[int],
+             n_shards: int) -> P:
+    """PartitionSpec sharding ``shard_dim`` over the model axis when
+    divisible, else fully replicated."""
+    if shard_dim is None or not _shardable(shape[shard_dim], n_shards):
+        return P(*([None] * len(shape)))
+    parts = [None] * len(shape)
+    parts[shard_dim] = MODEL_AXIS
+    return P(*parts)
+
+
+def dense_init(key: jax.Array, d_in: int, d_out: int, dtype,
+               n_shards: int, shard_dim: int = 1, scale: float = 1.0):
+    std = scale / math.sqrt(d_in)
+    w = (jax.random.normal(key, (d_in, d_out), jnp.float32) * std).astype(dtype)
+    return w, spec_for((d_in, d_out), shard_dim, n_shards)
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return ((x * jax.lax.rsqrt(var + eps)) * (1.0 + scale.astype(jnp.float32))
+            ).astype(dt)
+
+
+def layer_norm(x: jax.Array, scale: jax.Array, bias: jax.Array,
+               eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, hd); positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    freqs = rope_frequencies(hd, theta)                     # (hd/2,)
+    ang = positions[..., :, None, None].astype(jnp.float32) * freqs  # (...,S,1,hd/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def init_mlp(key: jax.Array, d: int, ff: int, gated: bool, dtype,
+             n_shards: int):
+    ks = jax.random.split(key, 3)
+    if gated:
+        w_up, s_up = dense_init(ks[0], d, ff, dtype, n_shards, 1)
+        w_gate, s_gate = dense_init(ks[1], d, ff, dtype, n_shards, 1)
+        w_down, s_down = dense_init(ks[2], ff, d, dtype, n_shards, 0)
+        return ({"up": w_up, "gate": w_gate, "down": w_down},
+                {"up": s_up, "gate": s_gate, "down": s_down})
+    w_up, s_up = dense_init(ks[0], d, ff, dtype, n_shards, 1)
+    w_down, s_down = dense_init(ks[2], ff, d, dtype, n_shards, 0)
+    return {"up": w_up, "down": w_down}, {"up": s_up, "down": s_down}
+
+
+def mlp(params, x: jax.Array) -> jax.Array:
+    if "gate" in params:
+        h = jax.nn.silu(x @ params["gate"]) * (x @ params["up"])
+    else:
+        h = jax.nn.gelu(x @ params["up"])
+    return h @ params["down"]
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array,
+                  mask: Optional[jax.Array] = None) -> jax.Array:
+    """Mean CE in f32; logits (..., V), labels (...) int32."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is not None:
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)

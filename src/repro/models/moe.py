@@ -1,0 +1,98 @@
+"""Mixture-of-Experts: top-k routing with capacity-based dispatch.
+
+Tokens are dispatched into a dense (E, C, d) buffer via the cumsum-rank
+trick (no sorting network, no dynamic shapes — everything static for
+pjit). Overflowing tokens are dropped (standard capacity-factor
+semantics); combine weights renormalize over the surviving experts.
+
+Sharding: expert weights are stacked (E, d, ff) and sharded on the ff
+dim over the model axis (divisible for every assigned MoE arch), so the
+expert compute is tensor-parallel while routing stays replicated; the
+dispatch/combine einsums lower to all-to-all-free gathers under GSPMD.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import spec_for
+
+
+def init_moe(key: jax.Array, d: int, ff: int, n_experts: int, dtype,
+             n_shards: int):
+    ks = jax.random.split(key, 4)
+    std = 1.0 / jnp.sqrt(d)
+    router = (jax.random.normal(ks[0], (d, n_experts), jnp.float32)
+              * std).astype(jnp.float32)  # router stays f32
+    w_gate = (jax.random.normal(ks[1], (n_experts, d, ff), jnp.float32)
+              * std).astype(dtype)
+    w_up = (jax.random.normal(ks[2], (n_experts, d, ff), jnp.float32)
+            * std).astype(dtype)
+    w_down = (jax.random.normal(ks[3], (n_experts, ff, d), jnp.float32)
+              * (1.0 / jnp.sqrt(ff))).astype(dtype)
+    params = {"router": router, "gate": w_gate, "up": w_up, "down": w_down}
+    specs = {"router": spec_for(router.shape, None, n_shards),
+             "gate": spec_for(w_gate.shape, 2, n_shards),
+             "up": spec_for(w_up.shape, 2, n_shards),
+             "down": spec_for(w_down.shape, 1, n_shards)}
+    return params, specs
+
+
+def moe_ffn(params, x: jax.Array, top_k: int,
+            capacity_factor: float = 1.25,
+            drop_free: bool = False) -> Tuple[jax.Array, jax.Array]:
+    """x: (B, S, d) -> (y: (B, S, d), aux_loss: scalar load-balance loss).
+
+    drop_free=True sizes capacity at the worst case (T*top_k) so no token
+    is ever dropped — used for decode, where T is the (small) batch and
+    capacity drops would make decoding diverge from teacher forcing."""
+    B, S, d = x.shape
+    E = params["router"].shape[1]
+    T = B * S
+    xf = x.reshape(T, d)
+    logits = xf.astype(jnp.float32) @ params["router"]        # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, top_k)         # (T, k)
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9)
+
+    if drop_free:
+        C = T * top_k
+    else:
+        C = int(max(1, round(capacity_factor * top_k * T / E)))
+
+    y = jnp.zeros((T, d), jnp.float32)
+    # per-expert running occupancy across the k slots
+    base_count = jnp.zeros((E,), jnp.int32)
+    slot_data = []
+    for slot in range(top_k):
+        e_id = gate_idx[:, slot]                               # (T,)
+        onehot = jax.nn.one_hot(e_id, E, dtype=jnp.int32)      # (T, E)
+        rank_in_e = jnp.cumsum(onehot, axis=0) - onehot        # pos within expert
+        pos = jnp.sum(rank_in_e * onehot, axis=1) + base_count[e_id]
+        base_count = base_count + jnp.sum(onehot, axis=0)
+        keep = pos < C
+        slot_data.append((e_id, jnp.where(keep, pos, C), keep))
+
+    # dispatch buffer with one overflow row (index C) per expert
+    buf = jnp.zeros((E, C + 1, d), x.dtype)
+    for e_id, pos, keep in slot_data:
+        buf = buf.at[e_id, pos].set(
+            jnp.where(keep[:, None], xf, 0.0).astype(x.dtype))
+
+    h = jnp.einsum("ecd,edf->ecf", buf, params["gate"])
+    h = jax.nn.silu(h) * jnp.einsum("ecd,edf->ecf", buf, params["up"])
+    out = jnp.einsum("ecf,efd->ecd", h, params["down"])       # (E, C+1, d)
+
+    for slot, (e_id, pos, keep) in enumerate(slot_data):
+        gathered = out[e_id, pos].astype(jnp.float32)
+        y = y + gathered * (gate_vals[:, slot] * keep)[:, None]
+
+    # load-balance auxiliary loss (Switch-style)
+    me = jnp.mean(probs, axis=0)
+    ce = jnp.mean(jax.nn.one_hot(gate_idx[:, 0], E, dtype=jnp.float32),
+                  axis=0)
+    aux = E * jnp.sum(me * ce)
+    return y.reshape(B, S, d).astype(x.dtype), aux

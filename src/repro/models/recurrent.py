@@ -1,0 +1,176 @@
+"""Recurrent sequence mixers: RG-LRU (recurrentgemma/Griffin) and
+xLSTM's mLSTM/sLSTM cells.
+
+Design notes (DESIGN.md §Arch-applicability):
+- RG-LRU uses the diagonal linear recurrence h_t = a_t h_{t-1} +
+  sqrt(1-a_t²)(i_t ⊙ x_t); the full sequence form runs as a single
+  `jax.lax.associative_scan` (log-depth, TPU-friendly) rather than a
+  sequential loop. Input/recurrence gates are per-channel affine
+  (block-diagonal in Griffin; the diagonal simplification is recorded).
+- mLSTM/sLSTM use exponential gating with the max-state stabilizer from
+  the xLSTM paper; sequence form is a `lax.scan` (chunkwise-parallel
+  forms are a recorded perf TODO in EXPERIMENTS.md §Perf).
+All functions take pre-projected inputs; projections live in
+transformer.py blocks.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+RGLRU_C = 8.0
+
+
+# ---------------------------------------------------------------------------
+# Causal depthwise conv1d (width W) used by the RG-LRU block
+# ---------------------------------------------------------------------------
+
+def causal_conv1d(x: jax.Array, w: jax.Array) -> jax.Array:
+    """x: (B, S, C); w: (W, C) depthwise taps. y_t = sum_k w_k x_{t-k}."""
+    W = w.shape[0]
+    out = jnp.zeros_like(x, dtype=jnp.float32)
+    for k in range(W):
+        shifted = jnp.pad(x, ((0, 0), (k, 0), (0, 0)))[:, : x.shape[1]]
+        out = out + shifted.astype(jnp.float32) * w[W - 1 - k].astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def causal_conv1d_step(x_t: jax.Array, conv_state: jax.Array,
+                       w: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """x_t: (B, C); conv_state: (B, W-1, C) past inputs (oldest first)."""
+    W = w.shape[0]
+    window = jnp.concatenate([conv_state, x_t[:, None, :]], axis=1)  # (B,W,C)
+    y = jnp.einsum("bwc,wc->bc", window.astype(jnp.float32),
+                   w.astype(jnp.float32)).astype(x_t.dtype)
+    return y, window[:, 1:]
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU
+# ---------------------------------------------------------------------------
+
+def _rglru_coeffs(x, p):
+    xf = x.astype(jnp.float32)
+    i_t = jax.nn.sigmoid(xf * p["alpha_i"] + p["beta_i"])
+    r_t = jax.nn.sigmoid(xf * p["alpha_r"] + p["beta_r"])
+    log_a = -RGLRU_C * jax.nn.softplus(p["a_param"]) * r_t
+    a_t = jnp.exp(log_a)
+    b_t = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-8)) * (i_t * xf)
+    return a_t, b_t
+
+
+def rglru_sequence(x: jax.Array, p) -> jax.Array:
+    """x: (B, S, w) post-conv inputs -> h: (B, S, w), h_0 = 0."""
+    a_t, b_t = _rglru_coeffs(x, p)
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a2 * a1, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a_t, b_t), axis=1)
+    return h.astype(x.dtype)
+
+
+def rglru_step(x_t: jax.Array, h_prev: jax.Array, p
+               ) -> Tuple[jax.Array, jax.Array]:
+    """x_t: (B, w); h_prev: (B, w) f32."""
+    a_t, b_t = _rglru_coeffs(x_t, p)
+    h = a_t * h_prev + b_t
+    return h.astype(x_t.dtype), h
+
+
+# ---------------------------------------------------------------------------
+# mLSTM (matrix memory, exponential gating)
+# ---------------------------------------------------------------------------
+
+class MLSTMState(NamedTuple):
+    C: jax.Array  # (B, H, hd, hd)
+    n: jax.Array  # (B, H, hd)
+    m: jax.Array  # (B, H)
+
+
+def mlstm_init_state(B: int, H: int, hd: int) -> MLSTMState:
+    return MLSTMState(C=jnp.zeros((B, H, hd, hd), jnp.float32),
+                      n=jnp.zeros((B, H, hd), jnp.float32),
+                      m=jnp.full((B, H), -1e30, jnp.float32))
+
+
+def _mlstm_cell(state: MLSTMState, qkvif):
+    q, k, v, i_pre, f_pre = qkvif  # (B,H,hd) x3, (B,H) x2
+    log_f = -jax.nn.softplus(-f_pre)          # log sigmoid(f)
+    m_new = jnp.maximum(log_f + state.m, i_pre)
+    i_g = jnp.exp(i_pre - m_new)
+    f_g = jnp.exp(log_f + state.m - m_new)
+    C = f_g[..., None, None] * state.C + i_g[..., None, None] * (
+        v[..., :, None] * k[..., None, :])
+    n = f_g[..., None] * state.n + i_g[..., None] * k
+    num = jnp.einsum("bhij,bhj->bhi", C, q)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhj,bhj->bh", n, q)), 1.0)
+    h = num / den[..., None]
+    return MLSTMState(C, n, m_new), h
+
+
+def mlstm_sequence(q, k, v, i_pre, f_pre) -> jax.Array:
+    """All inputs time-major-scanned. q/k/v: (B, S, H, hd) f32;
+    i_pre/f_pre: (B, S, H). Returns h: (B, S, H, hd)."""
+    B, S, H, hd = q.shape
+    state = mlstm_init_state(B, H, hd)
+    xs = (q.transpose(1, 0, 2, 3), k.transpose(1, 0, 2, 3),
+          v.transpose(1, 0, 2, 3), i_pre.transpose(1, 0, 2),
+          f_pre.transpose(1, 0, 2))
+    state, hs = jax.lax.scan(lambda s, x: _mlstm_cell(s, x), state, xs)
+    return hs.transpose(1, 0, 2, 3)
+
+
+def mlstm_step(state: MLSTMState, q, k, v, i_pre, f_pre):
+    return _mlstm_cell(state, (q, k, v, i_pre, f_pre))
+
+
+# ---------------------------------------------------------------------------
+# sLSTM (scalar memory, diagonal recurrence)
+# ---------------------------------------------------------------------------
+
+class SLSTMState(NamedTuple):
+    c: jax.Array  # (B, w)
+    n: jax.Array  # (B, w)
+    m: jax.Array  # (B, w)
+    h: jax.Array  # (B, w)
+
+
+def slstm_init_state(B: int, w: int) -> SLSTMState:
+    z = jnp.zeros((B, w), jnp.float32)
+    return SLSTMState(c=z, n=z, m=jnp.full((B, w), -1e30, jnp.float32), h=z)
+
+
+def _slstm_cell(state: SLSTMState, gates, r):
+    """gates: (B, w, 4) pre-activations (z, i, f, o); r: (w, 4) diagonal
+    recurrent weights applied to h_{t-1}."""
+    pre = gates.astype(jnp.float32) + state.h[..., None] * r[None]
+    z_pre, i_pre, f_pre, o_pre = [pre[..., j] for j in range(4)]
+    z = jnp.tanh(z_pre)
+    o = jax.nn.sigmoid(o_pre)
+    log_f = -jax.nn.softplus(-f_pre)
+    m_new = jnp.maximum(log_f + state.m, i_pre)
+    i_g = jnp.exp(i_pre - m_new)
+    f_g = jnp.exp(log_f + state.m - m_new)
+    c = f_g * state.c + i_g * z
+    n = jnp.maximum(f_g * state.n + i_g, 1e-6)
+    h = o * (c / n)
+    return SLSTMState(c, n, m_new, h), h
+
+
+def slstm_sequence(gates: jax.Array, r: jax.Array) -> jax.Array:
+    """gates: (B, S, w, 4); r: (w, 4). Returns h: (B, S, w)."""
+    B, S, w, _ = gates.shape
+    state = slstm_init_state(B, w)
+    state, hs = jax.lax.scan(
+        lambda s, g: _slstm_cell(s, g, r), state,
+        gates.transpose(1, 0, 2, 3))
+    return hs.transpose(1, 0, 2)
+
+
+def slstm_step(state: SLSTMState, gates: jax.Array, r: jax.Array):
+    return _slstm_cell(state, gates, r)

@@ -1,0 +1,547 @@
+"""Generic LM: one scanned implementation covering all 10 assigned
+architectures (dense GQA, MoE, RG-LRU hybrid, xLSTM, cross-attn VLM,
+bidirectional encoder).
+
+Depth is executed as `lax.scan` over *pattern periods* with stacked
+params (HLO size O(1) in depth — required for the 80 dry-run compiles
+on one CPU core), plus an unstacked remainder (e.g. recurrentgemma's
+38 = 12×[R,R,A] + [R,R]).
+
+Three modes share one block implementation:
+  train  — full sequence, no cache (blockwise attention)
+  prefill— full sequence, emits cache
+  decode — one token, consumes + updates cache
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from .attention import (blockwise_attention, cross_attention,
+                        decode_attention)
+from .config import ArchConfig
+from .layers import (apply_rope, cross_entropy, dense_init, init_mlp, mlp,
+                     rms_norm, spec_for)
+from .moe import init_moe, moe_ffn
+from . import recurrent as rec
+
+MOE_AUX_WEIGHT = 0.01
+
+
+# ---------------------------------------------------------------------------
+# Block init (returns params + PartitionSpec tree)
+# ---------------------------------------------------------------------------
+
+def _init_ffn(key, cfg: ArchConfig, n_shards):
+    if cfg.n_experts > 1:
+        return init_moe(key, cfg.d_model, cfg.d_ff, cfg.n_experts,
+                        cfg.jnp_dtype, n_shards)
+    return init_mlp(key, cfg.d_model, cfg.d_ff, cfg.gated_mlp,
+                    cfg.jnp_dtype, n_shards)
+
+
+def init_block(key: jax.Array, cfg: ArchConfig, kind: str, n_shards: int):
+    d, dt = cfg.d_model, cfg.jnp_dtype
+    dht = cfg.n_heads * cfg.head_dim
+    dkv = cfg.n_kv_heads * cfg.head_dim
+    ks = jax.random.split(key, 12)
+    p: Dict[str, Any] = {"ln": jnp.zeros((d,), dt)}
+    s: Dict[str, Any] = {"ln": P(None)}
+    head_dim_ok = cfg.n_heads % n_shards == 0 if n_shards else False
+
+    if kind in ("attn", "local_attn", "cross_attn"):
+        kv_src = cfg.d_vision if kind == "cross_attn" else d
+        p["wq"], s["wq"] = dense_init(ks[0], d, dht, dt, n_shards,
+                                      1 if head_dim_ok else 0)
+        p["wk"], s["wk"] = dense_init(ks[1], kv_src, dkv, dt, n_shards, 0)
+        p["wv"], s["wv"] = dense_init(ks[2], kv_src, dkv, dt, n_shards, 0)
+        p["wo"], s["wo"] = dense_init(ks[3], dht, d, dt, n_shards,
+                                      0 if head_dim_ok else 1)
+        if cfg.qkv_bias:
+            for nm, dim in (("bq", dht), ("bk", dkv), ("bv", dkv)):
+                p[nm] = jnp.zeros((dim,), dt)
+                s[nm] = P(None)
+        if cfg.qk_norm:
+            p["q_norm"] = jnp.zeros((cfg.head_dim,), dt)
+            p["k_norm"] = jnp.zeros((cfg.head_dim,), dt)
+            s["q_norm"] = s["k_norm"] = P(None)
+        if kind == "cross_attn":
+            p["gate_attn"] = jnp.zeros((), jnp.float32)
+            p["gate_mlp"] = jnp.zeros((), jnp.float32)
+            s["gate_attn"] = s["gate_mlp"] = P()
+        p["ln2"] = jnp.zeros((d,), dt)
+        s["ln2"] = P(None)
+        p["ffn"], s["ffn"] = _init_ffn(ks[4], cfg, n_shards)
+    elif kind == "rglru":
+        w = cfg.rnn_w
+        p["w_in"], s["w_in"] = dense_init(ks[0], d, 2 * w, dt, n_shards, 1)
+        p["w_out"], s["w_out"] = dense_init(ks[1], w, d, dt, n_shards, 0)
+        p["conv"] = (jax.random.normal(ks[2], (cfg.conv1d_size, w),
+                                       jnp.float32) * 0.1).astype(jnp.float32)
+        s["conv"] = spec_for((cfg.conv1d_size, w), 1, n_shards)
+        lru = {"a_param": jnp.full((w,), 0.5, jnp.float32),
+               "alpha_i": jnp.ones((w,), jnp.float32),
+               "beta_i": jnp.zeros((w,), jnp.float32),
+               "alpha_r": jnp.ones((w,), jnp.float32),
+               "beta_r": jnp.zeros((w,), jnp.float32)}
+        p["lru"] = lru
+        s["lru"] = {k: spec_for((w,), 0, n_shards) for k in lru}
+        p["ln2"] = jnp.zeros((d,), dt)
+        s["ln2"] = P(None)
+        p["ffn"], s["ffn"] = _init_ffn(ks[4], cfg, n_shards)
+    elif kind == "mlstm":
+        w = 2 * d
+        H = cfg.n_heads
+        p["w_up"], s["w_up"] = dense_init(ks[0], d, 2 * w, dt, n_shards, 1)
+        for i, nm in enumerate(("wq", "wk", "wv")):
+            p[nm], s[nm] = dense_init(ks[1 + i], w, w, dt, n_shards, 1)
+        p["w_if"], s["w_if"] = dense_init(ks[4], w, 2 * H, dt, 0, None)
+        p["w_down"], s["w_down"] = dense_init(ks[5], w, d, dt, n_shards, 0)
+    elif kind == "slstm":
+        w = d
+        p["w_gates"], s["w_gates"] = dense_init(ks[0], d, 4 * w, dt,
+                                                n_shards, 1)
+        p["r"] = (jax.random.normal(ks[1], (w, 4), jnp.float32) * 0.1)
+        s["r"] = P(None, None)
+        p["w_out"], s["w_out"] = dense_init(ks[2], w, d, dt, n_shards, 0)
+    else:
+        raise ValueError(kind)
+    return p, s
+
+
+def init_cache_block(cfg: ArchConfig, kind: str, B: int, cache_len: int):
+    """Zero cache + spec for one block. Batch sharded by the caller's
+    batch_spec; returned specs use placeholder 'B' resolved later."""
+    dt = cfg.jnp_dtype
+    dkv_h, hd = cfg.n_kv_heads, cfg.head_dim
+    if kind == "attn" and cfg.window:
+        cache_len = min(cache_len, cfg.window)
+    if kind == "local_attn":
+        cache_len = min(cache_len, cfg.local_window)
+    if kind in ("attn", "local_attn"):
+        if cfg.kv_quant:
+            return {"k": jnp.zeros((B, cache_len, dkv_h, hd), jnp.int8),
+                    "v": jnp.zeros((B, cache_len, dkv_h, hd), jnp.int8),
+                    "k_scale": jnp.zeros((B, cache_len, dkv_h),
+                                         jnp.float32),
+                    "v_scale": jnp.zeros((B, cache_len, dkv_h),
+                                         jnp.float32),
+                    "pos": jnp.full((B, cache_len), -1, jnp.int32)}
+        return {"k": jnp.zeros((B, cache_len, dkv_h, hd), dt),
+                "v": jnp.zeros((B, cache_len, dkv_h, hd), dt),
+                "pos": jnp.full((B, cache_len), -1, jnp.int32)}
+    if kind == "cross_attn":
+        return {"k": jnp.zeros((B, cfg.n_img_tokens, dkv_h, hd), dt),
+                "v": jnp.zeros((B, cfg.n_img_tokens, dkv_h, hd), dt)}
+    if kind == "rglru":
+        w = cfg.rnn_w
+        return {"h": jnp.zeros((B, w), jnp.float32),
+                "conv": jnp.zeros((B, cfg.conv1d_size - 1, w), dt)}
+    if kind == "mlstm":
+        H, hd2 = cfg.n_heads, (2 * cfg.d_model) // cfg.n_heads
+        return {"C": jnp.zeros((B, H, hd2, hd2), jnp.float32),
+                "n": jnp.zeros((B, H, hd2), jnp.float32),
+                "m": jnp.full((B, H), -1e30, jnp.float32)}
+    if kind == "slstm":
+        w = cfg.d_model
+        return {"c": jnp.zeros((B, w), jnp.float32),
+                "n": jnp.zeros((B, w), jnp.float32),
+                "m": jnp.full((B, w), -1e30, jnp.float32),
+                "h": jnp.zeros((B, w), jnp.float32)}
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# Block apply
+# ---------------------------------------------------------------------------
+
+def _split_heads(x, n, hd):
+    return x.reshape(x.shape[0], x.shape[1], n, hd)
+
+
+def _kv_quantize(x):
+    """(…, KV, hd) -> (int8 values, per-(…, KV) f32 scale). Symmetric
+    per-slot/kv-head quantization; exact dequant folds into attention
+    (models/attention.py). §Perf iteration 4: halves decode HBM traffic."""
+    scale = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1) / 127.0
+    scale = jnp.maximum(scale, 1e-10)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]),
+                 -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def _attn_qkv(p, cfg, x, kv_input):
+    q = x @ p["wq"]
+    k = kv_input @ p["wk"]
+    v = kv_input @ p["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = _split_heads(q, cfg.n_heads, cfg.head_dim)
+    k = _split_heads(k, cfg.n_kv_heads, cfg.head_dim)
+    v = _split_heads(v, cfg.n_kv_heads, cfg.head_dim)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    return q, k, v
+
+
+def _ffn_apply(p, cfg, x, mode="train"):
+    if cfg.n_experts > 1 and "router" in p:
+        return moe_ffn(p, x, cfg.top_k, cfg.capacity_factor,
+                       drop_free=(mode == "decode"))
+    return mlp(p, x), 0.0
+
+
+def apply_block(cfg: ArchConfig, kind: str, p, x, *, mode: str,
+                cache=None, vis_embeds=None, positions=None):
+    """x: (B, S, d). Returns (x, new_cache, aux_loss)."""
+    B, S, d = x.shape
+    aux = 0.0
+    h = rms_norm(x, p["ln"], cfg.norm_eps)
+    new_cache = cache
+
+    if kind in ("attn", "local_attn"):
+        window = cfg.local_window if kind == "local_attn" else cfg.window
+        q, k, v = _attn_qkv(p, cfg, h, h)
+        if cfg.rope:
+            q = apply_rope(q, positions, cfg.rope_theta)
+            k = apply_rope(k, positions, cfg.rope_theta)
+        if mode == "decode":
+            cap = cache["k"].shape[1]
+            if window > 0:          # ring buffer for windowed layers
+                slot = positions[:, 0] % cap
+            else:                   # full cache sized to max position
+                slot = jnp.minimum(positions[:, 0], cap - 1)
+            bidx = jnp.arange(B)
+            if cfg.kv_quant:
+                kq, ks_ = _kv_quantize(k[:, 0])
+                vq, vs_ = _kv_quantize(v[:, 0])
+                k_cache = cache["k"].at[bidx, slot].set(kq)
+                v_cache = cache["v"].at[bidx, slot].set(vq)
+                k_sc = cache["k_scale"].at[bidx, slot].set(ks_)
+                v_sc = cache["v_scale"].at[bidx, slot].set(vs_)
+                kv_pos = cache["pos"].at[bidx, slot].set(positions[:, 0])
+                o = decode_attention(q, k_cache, v_cache, kv_pos,
+                                     positions[:, 0], window=window,
+                                     k_scale=k_sc, v_scale=v_sc)
+                new_cache = {"k": k_cache, "v": v_cache, "k_scale": k_sc,
+                             "v_scale": v_sc, "pos": kv_pos}
+            else:
+                k_cache = cache["k"].at[bidx, slot].set(k[:, 0])
+                v_cache = cache["v"].at[bidx, slot].set(v[:, 0])
+                kv_pos = cache["pos"].at[bidx, slot].set(positions[:, 0])
+                o = decode_attention(q, k_cache, v_cache, kv_pos,
+                                     positions[:, 0], window=window)
+                new_cache = {"k": k_cache, "v": v_cache, "pos": kv_pos}
+        else:
+            o = blockwise_attention(q, k, v, causal=cfg.causal,
+                                    window=window)
+            if mode == "prefill":
+                cap = cache["k"].shape[1]
+                take = min(cap, S)
+                # ring-buffer invariant: position p lives in slot p % cap,
+                # so decode's writes land consistently.
+                slots = positions[:, S - take:] % cap        # (B, take)
+                bidx = jnp.arange(B)[:, None]
+                if cfg.kv_quant:
+                    kq, ks_ = _kv_quantize(k[:, S - take:])
+                    vq, vs_ = _kv_quantize(v[:, S - take:])
+                    new_cache = {
+                        "k": cache["k"].at[bidx, slots].set(kq),
+                        "v": cache["v"].at[bidx, slots].set(vq),
+                        "k_scale": cache["k_scale"].at[bidx, slots].set(ks_),
+                        "v_scale": cache["v_scale"].at[bidx, slots].set(vs_),
+                        "pos": cache["pos"].at[bidx, slots].set(
+                            positions[:, S - take:]),
+                    }
+                else:
+                    new_cache = {
+                        "k": cache["k"].at[bidx, slots].set(k[:, S - take:]),
+                        "v": cache["v"].at[bidx, slots].set(v[:, S - take:]),
+                        "pos": cache["pos"].at[bidx, slots].set(
+                            positions[:, S - take:]),
+                    }
+        x = x + o.reshape(B, S, -1) @ p["wo"]
+        h2 = rms_norm(x, p["ln2"], cfg.norm_eps)
+        y, aux = _ffn_apply(p["ffn"], cfg, h2, mode)
+        x = x + y
+    elif kind == "cross_attn":
+        if mode == "decode":
+            k, v = cache["k"], cache["v"]
+            q = _split_heads(h @ p["wq"], cfg.n_heads, cfg.head_dim)
+        else:
+            q, k, v = _attn_qkv(p, cfg, h, vis_embeds)
+            if mode == "prefill":
+                new_cache = {"k": k, "v": v}
+        o = cross_attention(q, k, v)
+        gate = jnp.tanh(p["gate_attn"]).astype(x.dtype)
+        x = x + gate * (o.reshape(B, S, -1) @ p["wo"])
+        h2 = rms_norm(x, p["ln2"], cfg.norm_eps)
+        y, aux = _ffn_apply(p["ffn"], cfg, h2, mode)
+        x = x + jnp.tanh(p["gate_mlp"]).astype(x.dtype) * y
+    elif kind == "rglru":
+        w = cfg.rnn_w
+        xin = h @ p["w_in"]
+        xr, gate = xin[..., :w], xin[..., w:]
+        if mode == "decode":
+            xr1, conv_state = rec.causal_conv1d_step(
+                xr[:, 0], cache["conv"], p["conv"])
+            h_new, h_f32 = rec.rglru_step(xr1, cache["h"], p["lru"])
+            o = h_new[:, None] * jax.nn.gelu(gate)
+            new_cache = {"h": h_f32, "conv": conv_state}
+        else:
+            xr1 = rec.causal_conv1d(xr, p["conv"])
+            hseq = rec.rglru_sequence(xr1, p["lru"])
+            o = hseq * jax.nn.gelu(gate)
+            if mode == "prefill":
+                W = cfg.conv1d_size
+                new_cache = {
+                    "h": hseq[:, -1].astype(jnp.float32),
+                    "conv": xr[:, -(W - 1):].astype(cfg.jnp_dtype)
+                    if S >= W - 1 else cache["conv"],
+                }
+        x = x + o @ p["w_out"]
+        h2 = rms_norm(x, p["ln2"], cfg.norm_eps)
+        y, aux = _ffn_apply(p["ffn"], cfg, h2, mode)
+        x = x + y
+    elif kind == "mlstm":
+        w = 2 * d
+        H = cfg.n_heads
+        hd2 = w // H
+        up = h @ p["w_up"]
+        xb, gate = up[..., :w], up[..., w:]
+        q = _split_heads(xb @ p["wq"], H, hd2).astype(jnp.float32)
+        k = _split_heads(xb @ p["wk"], H, hd2).astype(jnp.float32) / jnp.sqrt(
+            jnp.float32(hd2))
+        v = _split_heads(xb @ p["wv"], H, hd2).astype(jnp.float32)
+        ifg = (xb @ p["w_if"]).astype(jnp.float32)
+        i_pre, f_pre = ifg[..., :H], ifg[..., H:]
+        if mode == "decode":
+            st = rec.MLSTMState(cache["C"], cache["n"], cache["m"])
+            st, o = rec.mlstm_step(st, q[:, 0], k[:, 0], v[:, 0],
+                                   i_pre[:, 0], f_pre[:, 0])
+            o = o[:, None]
+            new_cache = {"C": st.C, "n": st.n, "m": st.m}
+        else:
+            o = rec.mlstm_sequence(q, k, v, i_pre, f_pre)
+            if mode == "prefill":
+                st = rec.MLSTMState(cache["C"], cache["n"], cache["m"])
+                # recompute final state cheaply by replaying the last step
+                # over the sequence scan output is not available; rerun scan
+                # once more for state (prefill-only cost, recurrent archs).
+                B_, S_, H_, hd_ = q.shape
+                st = rec.mlstm_init_state(B_, H_, hd_)
+                def body(s, t):
+                    s, _ = rec.mlstm_step(s, q[:, t], k[:, t], v[:, t],
+                                          i_pre[:, t], f_pre[:, t])
+                    return s, ()
+                st, _ = jax.lax.scan(body, st, jnp.arange(S_))
+                new_cache = {"C": st.C, "n": st.n, "m": st.m}
+        o = o.reshape(B, S, w) * jax.nn.silu(gate).astype(jnp.float32)
+        x = x + (o.astype(cfg.jnp_dtype) @ p["w_down"])
+    elif kind == "slstm":
+        w = d
+        gates = (h @ p["w_gates"]).reshape(B, S, w, 4)
+        if mode == "decode":
+            st = rec.SLSTMState(cache["c"], cache["n"], cache["m"],
+                                cache["h"])
+            st, o = rec.slstm_step(st, gates[:, 0], p["r"])
+            o = o[:, None]
+            new_cache = {"c": st.c, "n": st.n, "m": st.m, "h": st.h}
+        else:
+            o = rec.slstm_sequence(gates, p["r"])
+            if mode == "prefill":
+                st = rec.slstm_init_state(B, w)
+                def body(s, t):
+                    s, _ = rec.slstm_step(s, gates[:, t], p["r"])
+                    return s, ()
+                st, _ = jax.lax.scan(body, st, jnp.arange(S))
+                new_cache = {"c": st.c, "n": st.n, "m": st.m, "h": st.h}
+        x = x + (o.astype(cfg.jnp_dtype) @ p["w_out"])
+    else:
+        raise ValueError(kind)
+    return x, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# Whole-model init / apply
+# ---------------------------------------------------------------------------
+
+def init_params(key: jax.Array, cfg: ArchConfig, n_shards: int = 0):
+    """Returns (params, specs) with PartitionSpec leaves mirroring params."""
+    pattern, n_full, rem = cfg.schedule()
+    dt = cfg.jnp_dtype
+    d, v = cfg.d_model, cfg.vocab_size
+    keys = jax.random.split(key, 8 + len(pattern) + len(rem))
+
+    params: Dict[str, Any] = {}
+    specs: Dict[str, Any] = {}
+    params["embed"] = (jax.random.normal(keys[0], (v, d), jnp.float32)
+                       / jnp.sqrt(d)).astype(dt)
+    specs["embed"] = spec_for((v, d), 1, n_shards)
+    if cfg.frontend == "audio":
+        params["frontend"], specs["frontend"] = dense_init(
+            keys[1], cfg.frontend_dim, d, dt, n_shards, 1)
+    if cfg.frontend == "vision":
+        params["vis_proj"], specs["vis_proj"] = dense_init(
+            keys[1], cfg.d_vision, cfg.d_vision, dt, 0, None)
+    params["final_ln"] = jnp.zeros((d,), dt)
+    specs["final_ln"] = P(None)
+    params["unembed"], specs["unembed"] = dense_init(
+        keys[2], d, v, dt, n_shards, 1, scale=1.0)
+
+    blocks, bspecs = {}, {}
+    for i, kind in enumerate(pattern):
+        bkeys = jax.random.split(keys[3 + i], max(n_full, 1))
+        if n_full > 0:
+            stacked = jax.vmap(
+                lambda k: init_block(k, cfg, kind, n_shards)[0])(bkeys)
+            _, s1 = init_block(bkeys[0], cfg, kind, n_shards)
+            blocks[f"pos{i}"] = stacked
+            bspecs[f"pos{i}"] = jax.tree.map(
+                lambda sp: P(*((None,) + tuple(sp))), s1,
+                is_leaf=lambda a: isinstance(a, P))
+    params["period"] = blocks
+    specs["period"] = bspecs
+
+    rblocks, rspecs = [], []
+    for j, kind in enumerate(rem):
+        bp, bs = init_block(keys[3 + len(pattern) + j], cfg, kind, n_shards)
+        rblocks.append(bp)
+        rspecs.append(bs)
+    params["rem"] = rblocks
+    specs["rem"] = rspecs
+    return params, specs
+
+
+def init_cache(cfg: ArchConfig, B: int, cache_len: int):
+    """Cache pytree grouped like params (stacked per pattern position)."""
+    pattern, n_full, rem = cfg.schedule()
+    period = {}
+    for i, kind in enumerate(pattern):
+        one = init_cache_block(cfg, kind, B, cache_len)
+        period[f"pos{i}"] = jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (n_full,) + a.shape), one)
+    remc = [init_cache_block(cfg, kind, B, cache_len) for kind in rem]
+    return {"period": period, "rem": remc}
+
+
+def _embed_inputs(params, cfg, batch):
+    if cfg.frontend == "audio":
+        return batch["frames"] @ params["frontend"]
+    x = params["embed"][batch["tokens"]]
+    return x.astype(cfg.jnp_dtype)
+
+
+def _vis_kv_source(params, cfg, batch):
+    # decode reuses the prefill-built cross-attn KV cache: no image input
+    if cfg.frontend != "vision" or "image_embeds" not in batch:
+        return None
+    return (batch["image_embeds"] @ params["vis_proj"]).astype(cfg.jnp_dtype)
+
+
+def forward(params, cfg: ArchConfig, batch, *, mode: str = "train",
+            cache=None, positions=None, remat: bool = True,
+            seq_spec=None):
+    """Returns (logits, new_cache, aux_loss).
+
+    seq_spec: optional PartitionSpec for the residual stream (B, S, d) —
+    sequence parallelism: the scan-carried activations (the dominant
+    training-memory term at 4k×256) shard over the model axis between
+    blocks; GSPMD inserts the all-gather/reduce-scatter pair around each
+    block (§Perf iteration 6).
+    """
+    pattern, n_full, rem_kinds = cfg.schedule()
+    x = _embed_inputs(params, cfg, batch)
+    B, S = x.shape[0], x.shape[1]
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    vis = _vis_kv_source(params, cfg, batch)
+
+    def _seq_constrain(x):
+        if seq_spec is None:
+            return x
+        return jax.lax.with_sharding_constraint(x, seq_spec)
+
+    x = _seq_constrain(x)
+    use_cache = mode in ("prefill", "decode")
+
+    def period_body(carry, xs):
+        x, aux = carry
+        layer_params, layer_cache = xs
+        new_caches = {}
+        for i, kind in enumerate(pattern):
+            blk = functools.partial(apply_block, cfg, kind, mode=mode,
+                                    vis_embeds=vis, positions=positions)
+            if remat and mode == "train":
+                blk = jax.checkpoint(
+                    lambda p_, x_: apply_block(cfg, kind, p_, x_,
+                                               mode=mode, vis_embeds=vis,
+                                               positions=positions))
+                x, _, a = blk(layer_params[f"pos{i}"], x)
+                nc = None
+            else:
+                x, nc, a = blk(layer_params[f"pos{i}"], x,
+                               cache=layer_cache[f"pos{i}"]
+                               if layer_cache else None)
+            aux = aux + a
+            x = _seq_constrain(x)
+            if use_cache:
+                new_caches[f"pos{i}"] = nc
+        return (x, aux), new_caches if use_cache else 0
+
+    aux0 = jnp.zeros((), jnp.float32)
+    if n_full > 0:
+        xs = (params["period"], cache["period"] if use_cache else None)
+        (x, aux), stacked_new = jax.lax.scan(period_body, (x, aux0), xs)
+    else:
+        aux, stacked_new = aux0, {}
+
+    rem_new = []
+    for j, kind in enumerate(rem_kinds):
+        c_j = cache["rem"][j] if use_cache else None
+        x, nc, a = apply_block(cfg, kind, params["rem"][j], x, mode=mode,
+                               cache=c_j, vis_embeds=vis,
+                               positions=positions)
+        aux = aux + a
+        rem_new.append(nc)
+
+    x = rms_norm(x, params["final_ln"], cfg.norm_eps)
+    logits = x @ params["unembed"]
+    new_cache = ({"period": stacked_new, "rem": rem_new}
+                 if use_cache else None)
+    return logits, new_cache, aux
+
+
+def loss_fn(params, cfg: ArchConfig, batch, remat: bool = True,
+            seq_spec=None):
+    logits, _, aux = forward(params, cfg, batch, mode="train",
+                             remat=remat, seq_spec=seq_spec)
+    if cfg.loss == "frame_ce":
+        loss = cross_entropy(logits, batch["labels"])
+    else:
+        loss = cross_entropy(logits[:, :-1], batch["labels"][:, 1:])
+    return loss + MOE_AUX_WEIGHT * aux, {"ce": loss, "aux": aux}
+
+
+def prefill(params, cfg: ArchConfig, batch, cache_len: int):
+    """Full-sequence prefill: returns (last_logits, cache)."""
+    B = (batch["tokens"].shape[0] if "tokens" in batch
+         else batch["frames"].shape[0])
+    cache = init_cache(cfg, B, cache_len)
+    logits, cache, _ = forward(params, cfg, batch, mode="prefill",
+                               cache=cache)
+    return logits[:, -1], cache
+
+
+def decode_step(params, cfg: ArchConfig, token, cache, position):
+    """token: (B, 1) int32; position: (B,) int32 current absolute pos.
+    Returns (logits (B, V), new_cache)."""
+    batch = {"tokens": token}
+    logits, cache, _ = forward(params, cfg, batch, mode="decode",
+                               cache=cache, positions=position[:, None])
+    return logits[:, 0], cache

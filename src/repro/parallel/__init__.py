@@ -1,0 +1,4 @@
+from .sharding import (batch_partition_spec, cache_specs, input_specs_tree,
+                       shardings_from_specs, zero1_specs)
+from .compression import (compress_int8, decompress_int8,
+                          error_feedback_compress)

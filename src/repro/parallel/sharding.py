@@ -1,0 +1,100 @@
+"""Sharding rules for the (pod, data, model) production mesh.
+
+Conventions (DESIGN.md §5):
+  batch dims        -> ("pod", "data") when divisible, else replicated
+  TP param dims     -> "model" (decided at init time in models/layers.py
+                       spec_for; specs travel with the params)
+  KV caches         -> batch over ("pod","data"); seq/model replicated by
+                       default (model-axis KV sharding is a §Perf lever)
+  optimizer m/v     -> ZeRO-1: additionally sharded over "data" on the
+                       first divisible unsharded dim
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def _mesh_axis_size(mesh: Mesh, name: str) -> int:
+    return mesh.shape[name] if name in mesh.shape else 1
+
+
+def batch_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+
+def batch_partition_spec(mesh: Mesh, batch_size: int,
+                         extra_dims: int = 1) -> P:
+    """Spec for an array whose dim 0 is the global batch."""
+    axes = batch_axes(mesh)
+    total = int(np.prod([_mesh_axis_size(mesh, a) for a in axes]))
+    if axes and batch_size % total == 0:
+        return P(axes, *([None] * extra_dims))
+    return P(*([None] * (extra_dims + 1)))
+
+
+def input_specs_tree(mesh: Mesh, batch_tree: Any) -> Any:
+    """NamedShardings for a batch pytree of ShapeDtypeStructs/arrays:
+    dim 0 = batch on every leaf."""
+    def one(leaf):
+        spec = batch_partition_spec(mesh, leaf.shape[0], leaf.ndim - 1)
+        return NamedSharding(mesh, spec)
+    return jax.tree.map(one, batch_tree)
+
+
+def shardings_from_specs(mesh: Mesh, specs: Any) -> Any:
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), specs,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def cache_specs(mesh: Mesh, cache_shapes: Any, batch_size: int,
+                kv_seq_axis: Optional[str] = None) -> Any:
+    """Spec tree for a decode cache (built from eval_shape of init_cache).
+
+    Leaves under 'period' are stacked: (n_full, B, ...) -> batch at dim 1.
+    Leaves under 'rem' are (B, ...) -> batch at dim 0.
+    kv_seq_axis, if given (e.g. "model"), additionally shards dim
+    (batch_dim+1) of rank>=4 leaves — the KV-cache sequence dim — over
+    that axis (a §Perf lever for decode cells).
+    """
+    axes = batch_axes(mesh)
+    total = int(np.prod([_mesh_axis_size(mesh, a) for a in axes]))
+    shard_batch = axes and batch_size % total == 0
+
+    def build(path, leaf):
+        stacked = any(getattr(k, "key", None) == "period" for k in path)
+        bdim = 1 if stacked else 0
+        parts: list = [None] * leaf.ndim
+        if shard_batch and leaf.ndim > bdim and leaf.shape[bdim] == batch_size:
+            parts[bdim] = axes
+        if (kv_seq_axis is not None and leaf.ndim >= bdim + 3
+                and leaf.shape[bdim + 1] % _mesh_axis_size(
+                    mesh, kv_seq_axis) == 0):
+            parts[bdim + 1] = kv_seq_axis
+        return NamedSharding(mesh, P(*parts))
+
+    return jax.tree_util.tree_map_with_path(build, cache_shapes)
+
+
+def zero1_specs(param_specs: Any, param_shapes: Any, mesh: Mesh,
+                axis: str = "data") -> Any:
+    """ZeRO-1 optimizer-state specs: param spec + ``axis`` on the first
+    unsharded dim divisible by the axis size (fallback: param spec)."""
+    n = _mesh_axis_size(mesh, axis)
+
+    def one(spec: P, shp) -> P:
+        if n <= 1:
+            return spec
+        parts = list(spec) + [None] * (len(shp.shape) - len(spec))
+        for i, (p_, dim) in enumerate(zip(parts, shp.shape)):
+            if p_ is None and dim % n == 0 and dim > 0:
+                parts[i] = axis
+                return P(*parts)
+        return spec
+
+    return jax.tree.map(one, param_specs, param_shapes,
+                        is_leaf=lambda x: isinstance(x, P))

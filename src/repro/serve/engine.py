@@ -1,0 +1,119 @@
+"""Batched serving engine with continuous batching.
+
+Fixed-slot design (vLLM-style, without paging): ``n_slots`` concurrent
+sequences share one jitted decode step; finished sequences free their
+slot and queued requests are prefilled into it. Prefill is per-request
+(cache slices are written into the slot); decode is one fused step for
+all active slots every iteration.
+
+Recurrent/hybrid archs carry their state in the same cache pytree, so
+the engine is architecture-agnostic.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models import ArchConfig
+from ..models.transformer import decode_step, init_cache, prefill
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray               # (S,) int32
+    max_new_tokens: int = 16
+    eos_id: Optional[int] = None
+    # filled by the engine
+    output: Optional[List[int]] = None
+
+
+class ServeEngine:
+    def __init__(self, params: Any, cfg: ArchConfig, n_slots: int = 4,
+                 max_len: int = 256, greedy: bool = True, seed: int = 0):
+        assert cfg.is_decoder, "encoder-only archs cannot be served"
+        self.params, self.cfg = params, cfg
+        self.n_slots, self.max_len = n_slots, max_len
+        self.greedy = greedy
+        self.key = jax.random.PRNGKey(seed)
+        self.cache = init_cache(cfg, n_slots, max_len)
+        self.positions = np.zeros((n_slots,), np.int32)
+        self.active = np.zeros((n_slots,), bool)
+        self.slot_req: List[Optional[Request]] = [None] * n_slots
+        self.queue: List[Request] = []
+        self.done: Dict[int, Request] = {}
+        self._decode = jax.jit(
+            lambda p, tok, cache, pos: decode_step(p, cfg, tok, cache, pos))
+
+    # -- public API ---------------------------------------------------------
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def run(self, max_iters: int = 10_000) -> Dict[int, Request]:
+        it = 0
+        while (self.queue or self.active.any()) and it < max_iters:
+            self._admit()
+            self._step()
+            it += 1
+        return self.done
+
+    # -- internals ----------------------------------------------------------
+    def _admit(self) -> None:
+        for slot in range(self.n_slots):
+            if self.active[slot] or not self.queue:
+                continue
+            req = self.queue.pop(0)
+            req.output = []
+            batch = {"tokens": jnp.asarray(req.prompt[None, :], jnp.int32)}
+            last_logits, pcache = prefill(self.params, self.cfg, batch,
+                                          cache_len=self.max_len)
+            self._write_slot(slot, pcache)
+            tok = int(jnp.argmax(last_logits[0]))
+            req.output.append(tok)
+            self.slot_req[slot] = req
+            self.positions[slot] = len(req.prompt)
+            self.active[slot] = True
+
+    def _write_slot(self, slot: int, pcache: Any) -> None:
+        """Copy a batch-1 prefill cache into slot ``slot`` of the shared
+        cache (batch dim is 1 for 'rem' leaves, 2 for stacked leaves)."""
+        def write(dst, src):
+            if dst.ndim == src.ndim:  # stacked leaf: (n_full, B, ...)
+                return dst.at[:, slot].set(src[:, 0])
+            return dst
+        def write_rem(dst, src):
+            return dst.at[slot].set(src[0])
+        new_period = jax.tree.map(write, self.cache["period"],
+                                  pcache["period"])
+        new_rem = jax.tree.map(write_rem, self.cache["rem"], pcache["rem"])
+        self.cache = {"period": new_period, "rem": new_rem}
+
+    def _step(self) -> None:
+        if not self.active.any():
+            return
+        toks = np.zeros((self.n_slots, 1), np.int32)
+        for slot in range(self.n_slots):
+            if self.active[slot] and self.slot_req[slot].output:
+                toks[slot, 0] = self.slot_req[slot].output[-1]
+        logits, self.cache = self._decode(
+            self.params, jnp.asarray(toks), self.cache,
+            jnp.asarray(self.positions))
+        nxt = np.asarray(jnp.argmax(logits, axis=-1))
+        for slot in range(self.n_slots):
+            if not self.active[slot]:
+                continue
+            req = self.slot_req[slot]
+            tok = int(nxt[slot])
+            req.output.append(tok)
+            self.positions[slot] += 1
+            hit_eos = req.eos_id is not None and tok == req.eos_id
+            full = len(req.output) >= req.max_new_tokens
+            oom = self.positions[slot] >= self.max_len - 1
+            if hit_eos or full or oom:
+                self.active[slot] = False
+                self.slot_req[slot] = None
+                self.done[req.rid] = req

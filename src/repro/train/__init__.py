@@ -1,0 +1,3 @@
+from .optimizer import (adamw_init, adamw_update, clip_by_global_norm,
+                        warmup_cosine)
+from .loop import TrainState, make_train_step, train_loop

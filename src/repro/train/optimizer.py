@@ -1,0 +1,69 @@
+"""AdamW + schedules, from scratch (no optax in this environment).
+
+Optimizer state is a pytree mirroring params; under ZeRO-1 the m/v
+leaves get their own shardings (parallel/sharding.py:zero1_specs) so the
+data axis holds 1/N of the optimizer state.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    m: Any
+    v: Any
+    count: jax.Array
+
+
+def adamw_init(params: Any) -> AdamWState:
+    z = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return AdamWState(m=jax.tree.map(z, params), v=jax.tree.map(z, params),
+                      count=jnp.zeros((), jnp.int32))
+
+
+def clip_by_global_norm(grads: Any, max_norm: float) -> Tuple[Any, jax.Array]:
+    sq = sum(jnp.sum(g.astype(jnp.float32) ** 2)
+             for g in jax.tree.leaves(grads))
+    norm = jnp.sqrt(sq)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale
+                                   ).astype(g.dtype), grads), norm
+
+
+def adamw_update(grads: Any, state: AdamWState, params: Any, lr: jax.Array,
+                 b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+                 weight_decay: float = 0.1) -> Tuple[Any, AdamWState]:
+    count = state.count + 1
+    t = count.astype(jnp.float32)
+    bc1 = 1.0 - b1 ** t
+    bc2 = 1.0 - b2 ** t
+
+    def upd(p, g, m, v):
+        gf = g.astype(jnp.float32)
+        m_ = b1 * m + (1 - b1) * gf
+        v_ = b2 * v + (1 - b2) * gf * gf
+        step = (m_ / bc1) / (jnp.sqrt(v_ / bc2) + eps)
+        pf = p.astype(jnp.float32)
+        new_p = pf - lr * (step + weight_decay * pf)
+        return new_p.astype(p.dtype), m_, v_
+
+    out = jax.tree.map(upd, params, grads, state.m, state.v)
+    new_p = jax.tree.map(lambda t3: t3[0], out,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree.map(lambda t3: t3[1], out,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    new_v = jax.tree.map(lambda t3: t3[2], out,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    return new_p, AdamWState(m=new_m, v=new_v, count=count)
+
+
+def warmup_cosine(step: jax.Array, peak_lr: float, warmup: int,
+                  total: int, floor: float = 0.1) -> jax.Array:
+    s = step.astype(jnp.float32)
+    warm = s / jnp.maximum(warmup, 1)
+    prog = jnp.clip((s - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+    cos = floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return peak_lr * jnp.where(s < warmup, warm, cos)

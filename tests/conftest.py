@@ -1,0 +1,22 @@
+import jax
+import pytest
+
+from repro.models import ArchConfig
+
+# NOTE: do NOT set --xla_force_host_platform_device_count here — smoke
+# tests and benches must see 1 device; only launch/dryrun.py forces 512.
+
+jax.config.update("jax_enable_x64", False)
+
+
+def tiny_config(name="tiny", **kw) -> ArchConfig:
+    base = dict(name=name, family="dense", n_layers=4, d_model=32,
+                n_heads=4, n_kv_heads=2, head_dim=8, d_ff=64,
+                vocab_size=101, dtype="float32")
+    base.update(kw)
+    return ArchConfig(**base)
+
+
+@pytest.fixture
+def key():
+    return jax.random.PRNGKey(0)

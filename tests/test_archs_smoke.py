@@ -1,0 +1,89 @@
+"""Per-assigned-architecture smoke tests: reduced config, one forward +
+one train step on CPU, asserting shapes and finiteness (deliverable f)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config
+from repro.models import decode_step, init_params, loss_fn, prefill
+from repro.train.loop import init_train_state, make_train_step
+
+
+def _batch(cfg, key, B=2, S=16):
+    batch = {"labels": jax.random.randint(key, (B, S), 0, cfg.vocab_size)}
+    if cfg.frontend == "audio":
+        batch["frames"] = jax.random.normal(key, (B, S, cfg.frontend_dim))
+    else:
+        batch["tokens"] = jax.random.randint(key, (B, S), 0,
+                                             cfg.vocab_size)
+    if cfg.frontend == "vision":
+        batch["image_embeds"] = jax.random.normal(
+            key, (B, cfg.n_img_tokens, cfg.d_vision))
+    return batch
+
+
+@pytest.mark.parametrize("arch_id", ARCH_IDS)
+def test_reduced_config_forward_and_train_step(arch_id):
+    key = jax.random.PRNGKey(0)
+    cfg = get_config(arch_id, reduced=True)
+    assert cfg.name.replace("-", "_") == arch_id
+    params, specs = init_params(key, cfg)
+    assert jax.tree.structure(specs) is not None
+    batch = _batch(cfg, key)
+    loss, metrics = loss_fn(params, cfg, batch)
+    assert np.isfinite(float(loss))
+
+    state = init_train_state(params)
+    state, m = make_train_step(cfg, total_steps=10)(state, batch)
+    assert np.isfinite(float(m["loss"]))
+    assert np.isfinite(float(m["grad_norm"]))
+    assert int(state.step) == 1
+    # params changed
+    changed = any(
+        float(jnp.max(jnp.abs(a.astype(jnp.float32) -
+                              b.astype(jnp.float32)))) > 0
+        for a, b in zip(jax.tree.leaves(params),
+                        jax.tree.leaves(state.params)))
+    assert changed
+
+
+@pytest.mark.parametrize("arch_id",
+                         [a for a in ARCH_IDS if a != "hubert_xlarge"])
+def test_reduced_config_prefill_decode(arch_id):
+    key = jax.random.PRNGKey(0)
+    cfg = get_config(arch_id, reduced=True)
+    assert cfg.is_decoder
+    params, _ = init_params(key, cfg)
+    B, S = 2, 12
+    batch = _batch(cfg, key, B, S)
+    batch.pop("labels")
+    last, cache = prefill(params, cfg, batch, cache_len=S + 4)
+    assert last.shape == (B, cfg.vocab_size)
+    tok = jnp.argmax(last, -1)[:, None].astype(jnp.int32)
+    logits, cache = decode_step(params, cfg, tok, cache,
+                                jnp.full((B,), S, jnp.int32))
+    assert logits.shape == (B, cfg.vocab_size)
+    assert np.all(np.isfinite(np.asarray(logits, np.float32)))
+
+
+def test_full_configs_match_assignment_table():
+    t = {
+        "recurrentgemma_9b": (38, 4096, 16, 1, 12288, 256000),
+        "phi4_mini_3_8b": (32, 3072, 24, 8, 8192, 200064),
+        "qwen3_4b": (36, 2560, 32, 8, 9728, 151936),
+        "glm4_9b": (40, 4096, 32, 2, 13696, 151552),
+        "qwen2_5_3b": (36, 2048, 16, 2, 11008, 151936),
+        "xlstm_350m": (24, 1024, 4, 4, 0, 50304),
+        "mixtral_8x22b": (56, 6144, 48, 8, 16384, 32768),
+        "phi3_5_moe": (32, 4096, 32, 8, 6400, 32064),
+        "llama32_vision_11b": (40, 4096, 32, 8, 14336, 128256),
+        "hubert_xlarge": (48, 1280, 16, 16, 5120, 504),
+    }
+    for aid, (L, d, H, kv, ff, V) in t.items():
+        cfg = get_config(aid)
+        assert (cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                cfg.d_ff, cfg.vocab_size) == (L, d, H, kv, ff, V), aid
+    assert get_config("mixtral_8x22b").n_experts == 8
+    assert get_config("phi3_5_moe").n_experts == 16
+    assert get_config("hubert_xlarge").causal is False

@@ -1,0 +1,74 @@
+"""Table 3 protocol: exhaustive ground truth on the reduced RRAM space;
+which optimizers find the global minimum."""
+import itertools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (Objective, PAPER_4, get_workload_set,
+                        make_evaluator, pack, reduced_rram_space)
+from repro.core.baselines import (cmaes_search, es_search, g3pcx_search,
+                                  pso_search)
+from repro.core.genetic import plain_ga_search
+
+
+@pytest.fixture(scope="module")
+def setup():
+    sp = reduced_rram_space()
+    wa = pack(get_workload_set(PAPER_4))
+    ev = make_evaluator(sp, wa)
+    # pure EDAP landscape (no feasibility wall): the reduced §III-C1
+    # study probes optimizer behaviour on the multi-modal utilization
+    # landscape, not constraint handling
+    from repro.core.objectives import per_workload_scores
+
+    def score_fn(g):
+        return per_workload_scores(ev(g), "edap").mean(axis=1)
+
+    # exhaustive enumeration (240 designs)
+    combos = np.asarray(list(itertools.product(
+        *[range(len(v)) for v in sp.values])), np.int32)
+    scores = np.asarray(score_fn(jnp.asarray(combos)))
+    finite = scores < 1e29
+    gmin = float(scores[finite].min())
+    return sp, score_fn, gmin
+
+
+def test_space_enumerable(setup):
+    sp, _, gmin = setup
+    assert sp.size == 240
+    assert np.isfinite(gmin)
+
+
+def test_ga_reaches_global_minimum(setup):
+    """GA finds the global minimum on the majority of seeds (Table 3 —
+    and single-seed misses are exactly the sensitivity the paper's
+    Hamming sampling fixes)."""
+    sp, score_fn, gmin = setup
+    hits = 0
+    for seed in range(5):
+        res = plain_ga_search(jax.random.PRNGKey(seed), sp, score_fn,
+                              p_ga=24, total_generations=30)
+        hits += int(res.best_score <= gmin * 1.0001)
+    assert hits >= 3, hits
+
+
+def test_es_reaches_global_minimum(setup):
+    sp, score_fn, gmin = setup
+    hits = 0
+    for seed in range(5):
+        res = es_search(jax.random.PRNGKey(seed), sp, score_fn, iters=60)
+        hits += int(res.best_score <= gmin * 1.0001)
+    assert hits >= 3, hits
+
+
+def test_baselines_run_and_return_valid_genomes(setup):
+    sp, score_fn, gmin = setup
+    for fn in (pso_search, cmaes_search, g3pcx_search):
+        res = fn(jax.random.PRNGKey(2), sp, score_fn, iters=20)
+        assert res.best_genome.shape == (sp.n_params,)
+        assert np.all(res.best_genome >= 0)
+        assert np.all(res.best_genome < sp.cardinalities)
+        assert np.isfinite(res.best_score)

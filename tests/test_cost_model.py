@@ -1,0 +1,94 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (PAPER_4, get_space, get_workload_set,
+                        make_evaluator, pack, random_genomes)
+from repro.core.cost_model import evaluate_population
+
+
+def _metrics(mem="rram", n=64, seed=0):
+    sp = get_space(mem)
+    wa = pack(get_workload_set(PAPER_4))
+    ev = make_evaluator(sp, wa)
+    g = random_genomes(jax.random.PRNGKey(seed), sp, n)
+    return sp, np.asarray(g), ev(g)
+
+
+def test_outputs_finite_positive():
+    for mem in ("rram", "sram"):
+        _, _, m = _metrics(mem)
+        assert np.all(np.asarray(m.energy) > 0)
+        assert np.all(np.asarray(m.latency) > 0)
+        assert np.all(np.asarray(m.area) > 0)
+        assert np.all(np.isfinite(np.asarray(m.energy)))
+
+
+def test_rram_capacity_infeasibility_detected():
+    sp, g, m = _metrics("rram", n=256)
+    feas = np.asarray(m.feasible)
+    # small designs cannot hold VGG16 -> some infeasible, some feasible
+    assert 0 < feas.mean() < 1
+
+
+def test_area_monotone_in_tiles():
+    sp = get_space("rram")
+    wa = pack(get_workload_set(PAPER_4))
+    base = np.zeros((2, sp.n_params), np.int32)
+    gi = sp.index("g_per_chip")
+    base[1, gi] = len(sp.values[gi]) - 1  # max tile groups
+    m = evaluate_population(sp, wa, jnp.asarray(base))
+    assert float(m.area[1]) > float(m.area[0])
+
+
+def test_sram_area_exceeds_rram_for_same_tiling():
+    """SRAM cells are ~40x larger (160F^2 vs 4F^2)."""
+    rram, sram = get_space("rram"), get_space("sram")
+    wa = pack(get_workload_set(PAPER_4))
+    gr = np.zeros((1, rram.n_params), np.int32)
+    gs = np.zeros((1, sram.n_params), np.int32)
+    # align shared params at max crossbar size
+    for spc, g in ((rram, gr), (sram, gs)):
+        for nm in ("xbar_rows", "xbar_cols"):
+            g[0, spc.index(nm)] = len(spc.values[spc.index(nm)]) - 1
+    mr = evaluate_population(rram, wa, jnp.asarray(gr))
+    ms = evaluate_population(sram, wa, jnp.asarray(gs))
+    assert float(ms.area[0]) > float(mr.area[0])
+
+
+def test_voltage_scaling_increases_energy():
+    sp = get_space("rram")
+    wa = pack(get_workload_set(PAPER_4))
+    g = np.zeros((2, sp.n_params), np.int32)
+    vi = sp.index("v_op_step")
+    g[1, vi] = len(sp.values[vi]) - 1  # max voltage
+    m = evaluate_population(sp, wa, jnp.asarray(g))
+    assert np.all(np.asarray(m.energy[1]) > np.asarray(m.energy[0]))
+
+
+def test_sram_swapping_penalizes_latency():
+    """A tiny SRAM chip must swap VGG16 weights -> far slower than a
+    big chip on the same workload."""
+    sp = get_space("sram")
+    wa = pack(get_workload_set(("vgg16",)))
+    g = np.zeros((2, sp.n_params), np.int32)
+    for nm in ("xbar_rows", "xbar_cols", "c_per_tile", "t_per_router",
+               "g_per_chip"):
+        g[1, sp.index(nm)] = len(sp.values[sp.index(nm)]) - 1
+    m = evaluate_population(sp, wa, jnp.asarray(g))
+    assert float(m.latency[0, 0]) > float(m.latency[1, 0])
+
+
+def test_cost_scales_with_tech_alpha():
+    sp = get_space("sram", tech_variable=True)
+    wa = pack(get_workload_set(PAPER_4))
+    g = np.zeros((2, sp.n_params), np.int32)
+    ti = sp.index("tech_idx")
+    g[0, ti] = 3  # 32nm (alpha=1)
+    g[1, ti] = 7  # 7nm (alpha=3.871, but area shrinks (7/32)^2)
+    m = evaluate_population(sp, wa, jnp.asarray(g))
+    a32, a7 = float(m.area[0]), float(m.area[1])
+    c32, c7 = float(m.cost[0]), float(m.cost[1])
+    assert a7 < a32                      # smaller node, smaller die
+    assert c7 / a7 > c32 / a32           # but pricier per mm^2

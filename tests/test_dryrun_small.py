@@ -1,0 +1,55 @@
+"""Dry-run plumbing test: runs launch/dryrun.py in a subprocess (device
+count must be forced before jax init, so it cannot run in-process)."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+@pytest.mark.slow
+def test_dryrun_one_cell_compiles(tmp_path):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch",
+         "xlstm_350m", "--shape", "decode_32k", "--out", str(tmp_path)],
+        env=env, capture_output=True, text=True, timeout=560)
+    assert out.returncode == 0, out.stdout + out.stderr
+    files = list(tmp_path.glob("*.json"))
+    assert len(files) == 1
+    rec = json.loads(files[0].read_text())
+    assert rec["n_devices"] == 256
+    assert rec["cost"].get("flops", 0) > 0
+    assert rec["compile_s"] > 0
+
+
+def test_collective_parser():
+    from repro.launch.dryrun import collective_bytes
+    hlo = """\
+ENTRY %main.1 (a: f32[4]) -> f32[4] {
+  %ar = bf16[256,4096]{1,0} all-reduce(bf16[256,4096] %x), replica_groups={}
+  %ag.1 = f32[16,128]{1,0} all-gather(f32[2,128] %y), dimensions={0}
+  %nope = f32[4]{0} add(f32[4] %a, f32[4] %b)
+  %w = (s32[]) while(%t), condition=%cond.2, body=%body.3
+}
+
+%cond.2 (x: s32[]) -> pred[] {
+  %c = s32[] constant(7)
+  ROOT %lt = pred[] compare(%x, %c), direction=LT
+}
+
+%body.3 (x: s32[]) -> s32[] {
+  %ar2 = f32[10]{0} all-reduce(f32[10] %z), replica_groups={}
+  ROOT %n = s32[] add(%x, %one)
+}
+"""
+    got = collective_bytes(hlo)
+    # in-loop all-reduce multiplied by the trip count (7)
+    assert got["all-reduce"] == 256 * 4096 * 2 + 7 * 10 * 4
+    assert got["all-gather"] == 16 * 128 * 4
+    assert got["reduce-scatter"] == 0

@@ -1,0 +1,96 @@
+"""GA behaviour tests mirroring the paper's headline claims (small
+populations/generations for CPU; the full-scale versions live in
+benchmarks/)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (FOUR_PHASES, Objective, PAPER_4, get_space,
+                        get_workload_set, joint_search, make_evaluator,
+                        pack, plain_ga_search)  # noqa: F401
+from repro.core.objectives import per_workload_scores
+
+
+def _setup(mem="rram", workloads=PAPER_4):
+    sp = get_space(mem)
+    wls = get_workload_set(workloads)
+    wa = pack(wls)
+    ev = make_evaluator(sp, wa)
+    obj = Objective("edap", "max")
+
+    def score_fn(g):
+        return obj(ev(g))
+
+    cap = (lambda g: np.asarray(ev(jnp.asarray(g)).feasible)) \
+        if mem == "rram" else None
+    return sp, wa, ev, score_fn, cap
+
+
+def test_search_improves_over_sampling():
+    sp, wa, ev, score_fn, cap = _setup()
+    res = joint_search(jax.random.PRNGKey(0), sp, score_fn, p_h=300,
+                       p_e=100, p_ga=24, generations_per_phase=4,
+                       capacity_filter=cap)
+    assert np.isfinite(res.best_score)
+    assert res.best_score <= res.history[0]
+    assert res.best_score < 1e29  # found a feasible design
+
+
+def test_history_monotone_nonincreasing():
+    sp, wa, ev, score_fn, cap = _setup("sram")
+    res = joint_search(jax.random.PRNGKey(1), sp, score_fn, p_h=200,
+                       p_e=64, p_ga=16, generations_per_phase=3)
+    assert np.all(np.diff(res.history) <= 1e-6)
+
+
+def test_fourphase_beats_plain_on_average():
+    """Paper Fig. 4: 4-phase GA with Hamming sampling has lower mean
+    EDAP than the non-modified GA over seeds."""
+    sp, wa, ev, score_fn, cap = _setup()
+    four, plain = [], []
+    for seed in range(3):
+        r4 = joint_search(jax.random.PRNGKey(seed), sp, score_fn,
+                          p_h=300, p_e=100, p_ga=20,
+                          generations_per_phase=3, capacity_filter=cap)
+        rp = plain_ga_search(jax.random.PRNGKey(100 + seed), sp, score_fn,
+                             p_ga=20, total_generations=12,
+                             capacity_filter=cap)
+        four.append(r4.best_score)
+        plain.append(rp.best_score)
+    assert np.mean(four) <= np.mean(plain) * 1.05
+
+
+def test_joint_beats_largest_workload_optimization():
+    """Paper Fig. 3 / §V-A: the generalized (joint) design slashes EDAP
+    on the non-largest workloads relative to a VGG16-only design (the
+    paper reports up to 76.2% reduction; see EXPERIMENTS.md for the
+    deviation discussion on the largest workload itself)."""
+    sp, wa, ev, _, cap = _setup()
+    obj = Objective("edap", "mean")
+    score_fn = lambda g: obj(ev(g))
+    joint = joint_search(jax.random.PRNGKey(0), sp, score_fn, p_h=300,
+                         p_e=100, p_ga=20, generations_per_phase=4,
+                         capacity_filter=cap)
+    sp2, wa2, ev2, score2, cap2 = _setup(workloads=("vgg16",))
+    largest = joint_search(jax.random.PRNGKey(0), sp2, score2, p_h=300,
+                           p_e=100, p_ga=20, generations_per_phase=4,
+                           capacity_filter=cap2)
+    mj = ev(jnp.asarray(joint.best_genome[None]))
+    ml = ev(jnp.asarray(largest.best_genome[None]))
+    sj = np.asarray(per_workload_scores(mj))[0]
+    sl = np.asarray(per_workload_scores(ml))[0]
+    red = 1.0 - sj / np.maximum(sl, 1e-12)
+    # large reductions on the smaller workloads (resnet18, alexnet,
+    # mobilenetv3 are indices 0, 2, 3)
+    assert sum(r > 0.3 for r in red[[0, 2, 3]]) >= 2, red
+    # and a net geometric-mean win across the workload set
+    assert np.prod(sj / np.maximum(sl, 1e-12)) ** 0.25 < 1.0
+
+
+def test_result_population_sorted():
+    sp, wa, ev, score_fn, cap = _setup("sram")
+    res = joint_search(jax.random.PRNGKey(3), sp, score_fn, p_h=128,
+                       p_e=64, p_ga=16, generations_per_phase=2)
+    assert np.all(np.diff(res.scores) >= 0)
+    assert res.scores[0] == res.best_score

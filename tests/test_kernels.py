@@ -1,0 +1,71 @@
+"""Kernel validation: shape/dtype sweeps, interpret-mode vs ref oracle
+(deliverable c: per-kernel allclose against ref.py)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.ops import flash_mha, imc_gemm
+from repro.kernels.ref import attention_ref, imc_matmul_ref
+
+
+@pytest.mark.parametrize("M,K,N,R", [
+    (8, 128, 16, 128), (16, 256, 32, 128), (32, 512, 64, 256),
+    (8, 384, 8, 128), (8, 512, 8, 512),
+])
+def test_imc_matmul_matches_ref(M, K, N, R):
+    key = jax.random.PRNGKey(M + K + N)
+    x = jax.random.randint(key, (M, K), 0, 256, jnp.int32)
+    w = jax.random.normal(key, (K, N)) * 0.3
+    y = imc_gemm(x, w, xbar_rows=R)
+    y_ref = imc_matmul_ref(x, w, xbar_rows=R)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               rtol=1e-6, atol=1e-4)
+
+
+@pytest.mark.parametrize("adc_bits", [4, 6, 8, 12])
+def test_imc_matmul_adc_bits(adc_bits):
+    key = jax.random.PRNGKey(adc_bits)
+    x = jax.random.randint(key, (8, 256), 0, 256, jnp.int32)
+    w = jax.random.normal(key, (256, 16)) * 0.3
+    y = imc_gemm(x, w, xbar_rows=128, adc_bits=adc_bits)
+    y_ref = imc_matmul_ref(x, w, xbar_rows=128, adc_bits=adc_bits)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               rtol=1e-6, atol=1e-4)
+
+
+def test_imc_lower_adc_bits_more_error():
+    """ADC quantization: fewer bits -> larger deviation from exact GEMM."""
+    key = jax.random.PRNGKey(0)
+    x = jax.random.randint(key, (16, 512), 0, 256, jnp.int32)
+    w = jax.random.normal(key, (512, 32)) * 0.3
+    exact = (x.astype(jnp.float32) @ w)
+    e4 = float(jnp.abs(imc_gemm(x, w, xbar_rows=128, adc_bits=4)
+                       - exact).mean())
+    e10 = float(jnp.abs(imc_gemm(x, w, xbar_rows=128, adc_bits=10)
+                        - exact).mean())
+    assert e4 > e10
+
+
+@pytest.mark.parametrize("B,S,T,H,hd,causal,win,dt", [
+    (2, 32, 32, 2, 16, True, 0, jnp.float32),
+    (1, 64, 64, 4, 32, True, 0, jnp.float32),
+    (2, 48, 48, 2, 16, False, 0, jnp.float32),
+    (1, 64, 64, 2, 16, True, 16, jnp.float32),
+    (1, 40, 40, 2, 16, True, 0, jnp.float32),   # non-multiple of block
+    (2, 32, 32, 2, 16, True, 0, jnp.bfloat16),
+])
+def test_flash_attention_matches_ref(B, S, T, H, hd, causal, win, dt):
+    key = jax.random.PRNGKey(S)
+    q = jax.random.normal(key, (B, S, H, hd)).astype(dt)
+    k = jax.random.normal(jax.random.PRNGKey(1), (B, T, H, hd)).astype(dt)
+    v = jax.random.normal(jax.random.PRNGKey(2), (B, T, H, hd)).astype(dt)
+    o = flash_mha(q, k, v, causal=causal, window=win,
+                  block_q=16, block_k=16)
+    fold = lambda x: x.transpose(0, 2, 1, 3).reshape(B * H, x.shape[1], hd)
+    ref = attention_ref(fold(q), fold(k), fold(v), causal=causal,
+                        window=win)
+    ref = ref.reshape(B, H, S, hd).transpose(0, 2, 1, 3)
+    atol = 2e-2 if dt == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(o, np.float32),
+                               np.asarray(ref, np.float32), atol=atol)

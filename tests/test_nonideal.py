@@ -1,0 +1,58 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import get_space
+from repro.core.nonideal import (accuracy_proxy, apply_conductance_noise,
+                                 ir_drop_factor, noisy_crossbar_gemm,
+                                 quantize_uniform, sigma_of_g)
+from repro.core.workloads import get_workload_set, PAPER_4
+
+
+def test_sigma_profile_positive_and_bounded():
+    g = jnp.linspace(0, 1, 101)
+    s = np.asarray(sigma_of_g(g))
+    assert np.all(s >= 0) and np.all(s <= 0.5)
+    assert s[50] > s[0]  # mid-range conductance noisier than g=0
+
+
+def test_conductance_noise_zero_mean_ish():
+    key = jax.random.PRNGKey(0)
+    g = jnp.full((20000,), 0.5)
+    noisy = np.asarray(apply_conductance_noise(key, g))
+    assert abs(noisy.mean() - 0.5) < 0.01
+    assert noisy.std() > 0.01
+
+
+def test_ir_drop_worse_for_bigger_arrays():
+    assert float(ir_drop_factor(jnp.asarray(512.0))) < \
+        float(ir_drop_factor(jnp.asarray(64.0)))
+
+
+def test_quantize_uniform_is_idempotent():
+    x = jnp.linspace(-1, 1, 57)
+    q1 = quantize_uniform(x, 8)
+    q2 = quantize_uniform(q1, 8)
+    np.testing.assert_allclose(np.asarray(q1), np.asarray(q2), atol=1e-7)
+
+
+def test_noisy_gemm_close_to_exact():
+    key = jax.random.PRNGKey(1)
+    x = jax.random.uniform(key, (16, 256))
+    w = jax.random.normal(key, (256, 32)) * 0.3
+    y = noisy_crossbar_gemm(key, x, w, xbar_rows=128)
+    y_ref = x @ w
+    rel = float(jnp.linalg.norm(y - y_ref) / jnp.linalg.norm(y_ref))
+    assert rel < 0.35  # noisy but correlated
+
+
+def test_accuracy_proxy_ranges_and_rows_effect():
+    sp = get_space("rram")
+    wls = get_workload_set(PAPER_4)
+    ri, bi = sp.index("xbar_rows"), sp.index("bits_cell")
+    g = np.zeros((2, sp.n_params), np.int32)
+    g[0, ri] = 0   # 64 rows
+    g[1, ri] = 3   # 512 rows (more IR drop, wider ADC range)
+    acc = np.asarray(accuracy_proxy(jax.random.PRNGKey(0), sp, g, wls))
+    assert np.all((acc > 0.2) & (acc <= 1.0))
+    assert acc[0].mean() >= acc[1].mean() - 0.02

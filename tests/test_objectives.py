@@ -1,0 +1,56 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import Objective, PAPER_4, get_space, get_workload_set, \
+    make_evaluator, pack, random_genomes
+from repro.core.objectives import per_workload_scores
+
+
+def _m(n=32):
+    sp = get_space("rram")
+    wa = pack(get_workload_set(PAPER_4))
+    ev = make_evaluator(sp, wa)
+    return ev(random_genomes(jax.random.PRNGKey(0), sp, n))
+
+
+def test_aggregations_ordering():
+    m = _m()
+    s_max = Objective("edap", "max")(m)
+    s_mean = Objective("edap", "mean")(m)
+    finite = np.asarray(s_max) < 1e29
+    assert finite.any()
+    # max-based score >= mean-based score on feasible designs
+    assert np.all(np.asarray(s_max)[finite] >= np.asarray(s_mean)[finite])
+
+
+def test_infeasible_gets_big_penalty():
+    m = _m(64)
+    s = np.asarray(Objective("edap", "max")(m))
+    feas = np.asarray(m.feasible)
+    assert np.all(s[~feas] >= 1e29)
+
+
+def test_objective_kinds_all_run():
+    m = _m()
+    for kind in ("edap", "edp", "energy", "delay", "area", "edap_cost"):
+        s = Objective(kind, "max")(m)
+        assert s.shape == (32,)
+    acc = jnp.full((32, 4), 0.9)
+    s = Objective("edap_acc", "max")(m, accuracy=acc)
+    assert np.all(np.asarray(s) > 0)
+
+
+def test_accuracy_divides_score():
+    m = _m()
+    hi = Objective("edap_acc", "max")(m, accuracy=jnp.full((32, 4), 0.99))
+    lo = Objective("edap_acc", "max")(m, accuracy=jnp.full((32, 4), 0.50))
+    feas = np.asarray(hi) < 1e29
+    assert np.all(np.asarray(lo)[feas] > np.asarray(hi)[feas])
+
+
+def test_per_workload_scores_shape():
+    m = _m()
+    s = per_workload_scores(m, "edap")
+    assert s.shape == (32, 4)
+    assert np.all(np.asarray(s) > 0)

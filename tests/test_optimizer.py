@@ -1,0 +1,45 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.train.optimizer import (adamw_init, adamw_update,
+                                   clip_by_global_norm, warmup_cosine)
+
+
+def test_adamw_first_step_matches_closed_form():
+    p = {"w": jnp.asarray([1.0, -2.0])}
+    g = {"w": jnp.asarray([0.5, 0.5])}
+    st = adamw_init(p)
+    lr = jnp.asarray(0.1)
+    new_p, st2 = adamw_update(g, st, p, lr, b1=0.9, b2=0.95, eps=1e-8,
+                              weight_decay=0.0)
+    # bias-corrected first step = lr * g/ (|g| + eps) = lr * sign(g)
+    np.testing.assert_allclose(np.asarray(new_p["w"]),
+                               np.asarray(p["w"]) - 0.1 * np.sign([0.5, 0.5]),
+                               rtol=1e-4)
+    assert int(st2.count) == 1
+
+
+def test_weight_decay_shrinks_params():
+    p = {"w": jnp.asarray([10.0])}
+    g = {"w": jnp.asarray([0.0])}
+    st = adamw_init(p)
+    new_p, _ = adamw_update(g, st, p, jnp.asarray(0.1), weight_decay=0.1)
+    assert float(new_p["w"][0]) < 10.0
+
+
+def test_clip_global_norm():
+    g = {"a": jnp.asarray([3.0]), "b": jnp.asarray([4.0])}
+    clipped, norm = clip_by_global_norm(g, 1.0)
+    assert float(norm) == 5.0
+    total = np.sqrt(sum(float(jnp.sum(x ** 2))
+                        for x in jax.tree.leaves(clipped)))
+    np.testing.assert_allclose(total, 1.0, rtol=1e-5)
+
+
+def test_warmup_cosine_shape():
+    lrs = [float(warmup_cosine(jnp.asarray(s), 1.0, 10, 100))
+           for s in range(0, 100, 5)]
+    assert lrs[0] == 0.0
+    assert max(lrs) <= 1.0
+    assert lrs[-1] < lrs[4]  # decays after warmup

@@ -1,0 +1,17 @@
+import numpy as np
+
+from repro.core.pareto import edap_cost_front, pareto_front
+
+
+def test_pareto_front_toy():
+    pts = np.array([[1, 5], [2, 2], [5, 1], [3, 3], [6, 6]])
+    idx = set(pareto_front(pts))
+    assert idx == {0, 1, 2}
+
+
+def test_edap_cost_front_sorted_by_cost():
+    edap = np.array([5.0, 1.0, 3.0, 0.5, 4.0])
+    cost = np.array([1.0, 3.0, 2.0, 9.0, 1.5])
+    idx, e, c = edap_cost_front(edap, cost)
+    assert np.all(np.diff(c) >= 0)
+    assert np.all(np.diff(e) <= 0)  # front trades EDAP for cost

@@ -1,0 +1,90 @@
+"""Hypothesis property tests on system invariants (deliverable c)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import get_space
+from repro.core.cost_model import evaluate_population
+from repro.core.sampling import hamming_select
+from repro.core.workloads import Workload, pack
+from repro.parallel.compression import (compress_int8, decompress_int8,
+                                        error_feedback_compress)
+
+SETTINGS = dict(max_examples=20, deadline=None)
+
+
+@st.composite
+def genomes(draw, space, n=4):
+    cards = space.cardinalities
+    rows = [
+        [draw(st.integers(0, int(c) - 1)) for c in cards]
+        for _ in range(n)
+    ]
+    return np.asarray(rows, np.int32)
+
+
+@st.composite
+def workload_layers(draw):
+    n = draw(st.integers(1, 6))
+    layers = [[draw(st.integers(1, 4096)), draw(st.integers(1, 2048)),
+               draw(st.integers(1, 2048))] for _ in range(n)]
+    return np.asarray(layers, np.float64)
+
+
+@settings(**SETTINGS)
+@given(layers=workload_layers(), data=st.data())
+def test_cost_model_positive_and_monotone_in_workload(layers, data):
+    """Energy/latency strictly positive; doubling every layer's M never
+    decreases energy or latency."""
+    sp = get_space("rram")
+    g = jnp.asarray(data.draw(genomes(sp)))
+    wl1 = pack([Workload("a", layers, float((layers[:, 1]
+                                             * layers[:, 2]).sum()))])
+    layers2 = layers.copy()
+    layers2[:, 0] *= 2
+    wl2 = pack([Workload("a", layers2, float((layers2[:, 1]
+                                              * layers2[:, 2]).sum()))])
+    m1 = evaluate_population(sp, wl1, g)
+    m2 = evaluate_population(sp, wl2, g)
+    assert np.all(np.asarray(m1.energy) > 0)
+    assert np.all(np.asarray(m1.latency) > 0)
+    assert np.all(np.asarray(m2.energy) >= np.asarray(m1.energy) * 0.999)
+    assert np.all(np.asarray(m2.latency) >= np.asarray(m1.latency) * 0.999)
+
+
+@settings(**SETTINGS)
+@given(data=st.data())
+def test_hamming_select_subset_and_unique(data):
+    sp = get_space("sram")
+    cands = jnp.asarray(data.draw(genomes(sp, n=24)))
+    k = data.draw(st.integers(2, 12))
+    sel = np.asarray(hamming_select(cands, k))
+    cand_set = {tuple(r) for r in np.asarray(cands)}
+    assert all(tuple(r) in cand_set for r in sel)
+
+
+@settings(**SETTINGS)
+@given(st.lists(st.floats(-100, 100, allow_nan=False), min_size=2,
+                max_size=64))
+def test_int8_compression_bounded_error(vals):
+    x = jnp.asarray(vals, jnp.float32)
+    q, s = compress_int8(x)
+    err = np.abs(np.asarray(decompress_int8(q, s) - x))
+    assert np.all(err <= float(s) * 0.5 + 1e-6)
+
+
+@settings(**SETTINGS)
+@given(st.integers(0, 2**31 - 1))
+def test_error_feedback_accumulates_to_truth(seed):
+    """Sum of decompressed updates + final residual == sum of raw grads
+    (error feedback loses nothing)."""
+    rng = np.random.default_rng(seed)
+    g = jnp.asarray(rng.standard_normal(32), jnp.float32)
+    r = jnp.zeros(32)
+    total = jnp.zeros(32)
+    for _ in range(5):
+        q, s, r = error_feedback_compress(g, r)
+        total = total + decompress_int8(q, s)
+    np.testing.assert_allclose(np.asarray(total + r), np.asarray(5 * g),
+                               rtol=1e-4, atol=1e-4)

@@ -1,0 +1,46 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (get_space, hamming_select, random_genomes,
+                        sample_initial)
+
+
+def _pairwise_min_hamming(pop: np.ndarray) -> float:
+    n = pop.shape[0]
+    best = np.inf
+    for i in range(n):
+        d = np.sum(pop != pop[i], axis=1)
+        d[i] = 10**9
+        best = min(best, d.min())
+    return best
+
+
+def test_hamming_select_more_diverse_than_random():
+    sp = get_space("rram")
+    key = jax.random.PRNGKey(0)
+    cands = random_genomes(key, sp, 300)
+    sel = np.asarray(hamming_select(cands, 30))
+    rnd = np.asarray(cands[:30])
+    assert _pairwise_min_hamming(sel) >= _pairwise_min_hamming(rnd)
+
+
+def test_hamming_select_no_duplicates():
+    sp = get_space("rram")
+    cands = random_genomes(jax.random.PRNGKey(1), sp, 200)
+    sel = np.asarray(hamming_select(cands, 50))
+    assert len({tuple(r) for r in sel}) == 50
+
+
+def test_capacity_filter_respected():
+    sp = get_space("rram")
+    # filter: only designs with max tile groups
+    gi = sp.index("g_per_chip")
+    top = len(sp.values[gi]) - 1
+
+    def filt(g):
+        return np.asarray(g)[:, gi] == top
+
+    sel = np.asarray(sample_initial(jax.random.PRNGKey(2), sp,
+                                    p_h=256, p_e=16, capacity_filter=filt))
+    assert np.all(sel[:, gi] == top)

@@ -1,0 +1,38 @@
+import numpy as np
+
+from repro.core import get_space, reduced_rram_space
+
+
+def test_space_sizes_match_paper_range():
+    # paper §III-B: 0.25e7 .. 1.21e7 depending on experiment
+    rram = get_space("rram")
+    sram = get_space("sram")
+    assert 5e5 <= rram.size <= 2e7
+    assert 2e5 <= sram.size <= 2e7
+    assert get_space("rram", tech_variable=True).size > rram.size
+
+
+def test_decode_roundtrip():
+    sp = get_space("rram")
+    genome = np.array([i % c for i, c in enumerate(sp.cardinalities)],
+                      dtype=np.int32)
+    d = sp.decode(genome)
+    assert set(d) == set(sp.names)
+    assert d["xbar_rows"] in (64.0, 128.0, 256.0, 512.0)
+    assert "bits_cell" in d
+
+
+def test_sram_has_no_bits_cell_but_wider_glb():
+    sram = get_space("sram")
+    rram = get_space("rram")
+    assert "bits_cell" not in sram.names
+    assert max(sram.values[sram.index("glb_kb")]) > \
+        max(rram.values[rram.index("glb_kb")])
+
+
+def test_value_table_padding():
+    sp = reduced_rram_space()
+    t = sp.value_table()
+    assert t.shape[0] == sp.n_params
+    for i, v in enumerate(sp.values):
+        assert np.allclose(t[i, : len(v)], v)

@@ -1,0 +1,61 @@
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config
+from repro.core.workloads import (PAPER_4, PAPER_9, from_arch_config,
+                                  get_workload, get_workload_set, pack)
+
+
+def test_known_weight_counts():
+    # published parameter counts (weights only, conv+fc)
+    r18 = get_workload("resnet18")
+    assert 10e6 < r18.active_weights < 13e6
+    vgg = get_workload("vgg16")
+    assert 1.2e8 < vgg.active_weights < 1.5e8
+    alex = get_workload("alexnet")
+    assert 5e7 < alex.active_weights < 7e7
+
+
+def test_vgg16_largest_layer_matches_paper():
+    """§IV-J: VGG16's largest layer ~8.2e8 memory elements at 8-bit
+    (= 1.03e8 weights)."""
+    vgg = get_workload("vgg16")
+    assert abs(vgg.largest_layer_weights * 8 - 8.2e8) / 8.2e8 < 0.02
+
+
+def test_gpt2_largest_layer_matches_paper():
+    """§IV-J: GPT-2 Medium largest layer ~4.1e8 elements (8-bit)."""
+    g = get_workload("gpt2_medium")
+    assert abs(g.largest_layer_weights * 8 - 4.1e8) / 4.1e8 < 0.02
+
+
+def test_workload_sets():
+    assert len(get_workload_set(PAPER_4)) == 4
+    assert len(get_workload_set(PAPER_9)) == 9
+
+
+def test_pack_shapes_and_mask():
+    wls = get_workload_set(PAPER_4)
+    wa = pack(wls)
+    lmax = max(w.n_layers for w in wls)
+    assert wa.layers.shape == (4, lmax, 3)
+    for i, w in enumerate(wls):
+        assert wa.mask[i].sum() == w.n_layers
+        assert wa.stored_weights[i] == pytest.approx(w.stored_weights)
+
+
+@pytest.mark.parametrize("arch_id", ARCH_IDS)
+def test_from_arch_config_consistent_with_param_count(arch_id):
+    cfg = get_config(arch_id)
+    wl = from_arch_config(cfg, seq=128)
+    # stored weights should be within 2x of the analytic param count
+    # (embedding gather and norms are excluded from GEMM workloads)
+    ratio = wl.stored_weights / cfg.param_count()
+    assert 0.3 < ratio < 1.5, (arch_id, ratio)
+    assert wl.macs > 0
+
+
+def test_moe_stored_exceeds_active():
+    cfg = get_config("mixtral_8x22b")
+    wl = from_arch_config(cfg, seq=128)
+    assert wl.stored_weights > 2.0 * wl.active_weights
