@@ -1,0 +1,53 @@
+"""Benchmarks for the experiment-runner hot path.
+
+Two cells:
+  experiments_eval_hot   — steady-state batched population evaluation
+                           through runner.make_scorer (the per-
+                           generation device computation): us/call and
+                           design-evaluations/s at the benchmark
+                           population scale, PAPER_4 and PAPER_9.
+  experiments_smoke_run  — wall time of a full tiny scenario
+                           (search + specific baselines + report),
+                           write=False so only compute is measured.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+
+from repro.core import make_objective, pack, random_genomes
+from repro.experiments import get_scenario, make_scorer, run_scenario
+
+from .common import Bench
+
+
+def experiments_eval_hot(pop: int = 512, iters: int = 30) -> None:
+    for name in ("rram_small_set", "rram_large_set"):
+        sc = get_scenario(name)
+        space = sc.space()
+        wa = pack(sc.resolve_workloads())
+        score_fn, _ = make_scorer(space, wa, make_objective(sc.objective))
+        g = random_genomes(jax.random.PRNGKey(0), space, pop)
+        score_fn(g).block_until_ready()  # compile
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            s = score_fn(g)
+        s.block_until_ready()
+        dt = (time.perf_counter() - t0) / iters
+        Bench.record(f"experiments_eval_hot_{name}", dt,
+                     f"pop{pop}_W{wa.n_workloads}_"
+                     f"{pop / dt:.0f}designs_per_s")
+
+
+def experiments_smoke_run() -> None:
+    t0 = time.perf_counter()
+    res = run_scenario(get_scenario("rram_smoke"), write=False)
+    dt = time.perf_counter() - t0
+    Bench.record("experiments_smoke_run", dt,
+                 f"gap_{res['gap']['mean_pct']:.1f}pct")
+
+
+def experiments_runner() -> None:
+    experiments_eval_hot()
+    experiments_smoke_run()

@@ -8,10 +8,11 @@ from __future__ import annotations
 
 import sys
 
-from . import bench_paper
+from . import bench_experiments, bench_paper
 from .common import Bench
 
 ALL = {
+    "experiments": bench_experiments.experiments_runner,
     "table3": bench_paper.table3_algorithms,
     "fig3": bench_paper.fig3_joint_vs_largest,
     "fig4": bench_paper.fig4_convergence,

@@ -1,40 +1,41 @@
 """Beyond-paper scenario: co-optimize one SRAM IMC accelerator for the
-assigned LM architecture set — the paper's technique driving hardware
-for modern LM workloads, plus a simulated sanity check that runs one
+assigned LM architecture set, via the experiment registry's
+``sram_lm_archs`` scenario — the paper's technique driving hardware for
+modern LM workloads — plus a simulated sanity check that runs one
 projection GEMM of the winning design through the Pallas bit-serial
 crossbar kernel.
 
-  PYTHONPATH=src python examples/codesign_lm_archs.py
+  PYTHONPATH=src python examples/codesign_lm_archs.py [--full]
+
+Default runs the scenario at the smoke budget (seconds on CPU); --full
+uses the registered default budget (same as
+``python -m repro.experiments run --scenario sram_lm_archs``).
 """
+import dataclasses
+import sys
+
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs import get_config
-from repro.core import (Objective, from_arch_config, get_space,
-                        joint_search, make_evaluator, pack)
+from repro.experiments import SMOKE_BUDGET, get_scenario, run_scenario
 from repro.kernels.ops import imc_gemm
 
-ARCHS = ("qwen3_4b", "qwen2_5_3b", "xlstm_350m", "hubert_xlarge",
-         "phi4_mini_3_8b")
+scenario = get_scenario("sram_lm_archs")
+if "--full" not in sys.argv:
+    scenario = dataclasses.replace(scenario, budget=SMOKE_BUDGET,
+                                   specific_baselines=False)
+res = run_scenario(scenario, write=False)
 
-space = get_space("sram")
-workloads = [from_arch_config(get_config(a), seq=256) for a in ARCHS]
-arrays = pack(workloads)
-evaluate = make_evaluator(space, arrays)
-objective = Objective("edap", "mean")
-
-res = joint_search(jax.random.PRNGKey(0), space,
-                   lambda g: objective(evaluate(g)),
-                   p_h=300, p_e=120, p_ga=24, generations_per_phase=4)
-design = space.decode(res.best_genome)
+design = res["generalized"]["design"]
 print("generalized LM-serving IMC design:", design)
-m = evaluate(jnp.asarray(res.best_genome[None]))
-for i, a in enumerate(ARCHS):
-    print(f"  {a:18s}",
-          f"E {float(m.energy[0, i])*1e3:9.2f} mJ  "
-          f"L {float(m.latency[0, i])*1e3:9.2f} ms")
-print(f"  area {float(m.area[0]):.1f} mm^2")
+for arch, m in res["generalized"]["per_workload"].items():
+    print(f"  {arch:18s}",
+          f"E {m['energy_mJ']:9.2f} mJ  L {m['latency_ms']:9.2f} ms")
+print(f"  area {res['generalized']['area_mm2']:.1f} mm^2")
+if "gap" in res:
+    print(f"  mean specific-vs-generalized EDAP gap: "
+          f"{res['gap']['mean_pct']:.1f}%")
 
 # run one qwen3 QKV projection through the winning crossbar geometry
 cfg = get_config("qwen3_4b", reduced=True)

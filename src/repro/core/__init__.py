@@ -6,10 +6,11 @@ from .search_space import (SearchSpace, get_space, rram_space, sram_space,
                            reduced_rram_space)
 from .cost_model import (CostMetrics, HWConstants, evaluate_population,
                          make_evaluator)
-from .objectives import Objective, per_workload_scores, AREA_CONSTRAINT_MM2
+from .objectives import (Objective, make_objective, per_workload_scores,
+                         AREA_CONSTRAINT_MM2)
 from .sampling import hamming_select, random_genomes, sample_initial
 from .genetic import (FOUR_PHASES, PLAIN_PHASE, Phase, SearchResult,
-                      joint_search, plain_ga_search, run_ga)
+                      joint_search, plain_ga_search, random_search, run_ga)
 from .workloads import (PAPER_4, PAPER_9, Workload, WorkloadArrays,
                         from_arch_config, get_workload, get_workload_set,
                         pack)

@@ -72,6 +72,29 @@ class Objective:
         return jnp.where(bad, _BIG, s)
 
 
+OBJECTIVE_KINDS = ("edap", "edp", "energy", "delay", "area", "edap_cost",
+                   "edap_acc")
+AGGREGATIONS = ("max", "mean", "all")
+
+
+def make_objective(spec: str,
+                   area_constraint: float = AREA_CONSTRAINT_MM2) -> Objective:
+    """Parse an objective spec string into an Objective.
+
+    Accepts ``"edap"`` (default max aggregation) or ``"edap:mean"``,
+    ``"edp:all"``, ... — the scenario-pluggable form used by the
+    experiment registry (experiments/scenarios.py)."""
+    kind, _, agg = spec.partition(":")
+    agg = agg or "max"
+    if kind not in OBJECTIVE_KINDS:
+        raise ValueError(f"unknown objective kind {kind!r}; "
+                         f"expected one of {OBJECTIVE_KINDS}")
+    if agg not in AGGREGATIONS:
+        raise ValueError(f"unknown aggregation {agg!r}; "
+                         f"expected one of {AGGREGATIONS}")
+    return Objective(kind, agg, area_constraint)
+
+
 def per_workload_scores(m: CostMetrics, kind: str = "edap") -> jnp.ndarray:
     """(P, W) per-workload scores of each design (for Figs. 3/5/10:
     evaluate a chosen design on each workload separately)."""

@@ -1,0 +1,15 @@
+"""Experiments: the declarative scenario registry, runner, and report
+layer that reproduce the paper's EDAP tables end-to-end.
+
+  python -m repro.experiments list
+  python -m repro.experiments run --scenario rram_small_set
+  python -m repro.experiments report
+"""
+from .scenarios import (Budget, DEFAULT_BUDGET, REGISTRY, SMOKE_BUDGET,
+                        Scenario, get_scenario, paper_table_scenarios,
+                        scenario_names)
+from .runner import (DEFAULT_OUT_DIR, make_scorer, run_scenario,
+                     run_search)
+from .report import (baseline_reductions, compute_gap, load_results,
+                     render_markdown, render_summary, write_artifacts,
+                     write_summary)

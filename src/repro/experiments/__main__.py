@@ -1,0 +1,125 @@
+"""CLI for the experiment registry.
+
+  python -m repro.experiments list [--verbose]
+  python -m repro.experiments show --scenario rram_small_set
+  python -m repro.experiments run --scenario rram_small_set \
+      [--out DIR] [--seed N] [--force]
+  python -m repro.experiments run --all [--out DIR]
+  python -m repro.experiments report [--out DIR]
+
+``run`` executes a named scenario (cached/resumable; see runner.py) and
+writes ``result.json`` + ``report.md`` under ``--out``; ``report``
+aggregates every cached result into ``summary.md`` — the regenerated
+paper tables. README.md maps each paper table to its scenario names.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import sys
+
+from . import report, runner
+from .scenarios import REGISTRY, get_scenario
+
+
+def cmd_list(args) -> int:
+    rows = [("name", "mem", "W", "algorithm", "paper ref")]
+    rows += [(s.name, s.mem, str(len(s.workloads)), s.algorithm,
+              s.paper_ref) for s in REGISTRY.values()]
+    widths = [max(len(r[i]) for r in rows) for i in range(len(rows[0]))]
+    for i, r in enumerate(rows):
+        print("  ".join(c.ljust(w) for c, w in zip(r, widths)).rstrip())
+        if i == 0:
+            print("  ".join("-" * w for w in widths))
+    if args.verbose:
+        print()
+        for s in REGISTRY.values():
+            print(f"{s.name}: {s.description}")
+    return 0
+
+
+def cmd_show(args) -> int:
+    s = get_scenario(args.scenario)
+    d = dataclasses.asdict(s)
+    d["workloads"] = list(d["workloads"])
+    print(json.dumps(d, indent=1))
+    return 0
+
+
+def cmd_run(args) -> int:
+    names = list(REGISTRY) if args.all else [args.scenario]
+    if not args.all and args.scenario is None:
+        print("run: pass --scenario NAME or --all", file=sys.stderr)
+        return 2
+    for name in names:
+        sc = get_scenario(name)
+        res = runner.run_scenario(sc, out_dir=args.out, force=args.force,
+                                  seed=args.seed)
+        tag = "cached" if res.get("cached") else \
+            f"{res['wall_time_s']:.1f}s"
+        gap = res.get("gap", {}).get("mean_pct")
+        gap_s = f", mean gap {gap:.1f}%" if gap is not None else ""
+        print(f"[{tag}] {name}: best {res['objective']} score "
+              f"{res['best_score']:.4g}, area "
+              f"{res['generalized']['area_mm2']:.1f} mm²{gap_s}")
+        print(f"  -> {args.out}/{name}/result.json (+ report.md)")
+    return 0
+
+
+def cmd_report(args) -> int:
+    results = report.load_results(args.out)
+    if not results:
+        print(f"no cached results under {args.out!r}; run scenarios "
+              "first (python -m repro.experiments run --scenario ...)",
+              file=sys.stderr)
+        return 1
+    text = report.render_summary(results)
+    path = os.path.join(args.out, "summary.md")
+    with open(path, "w") as f:
+        f.write(text)
+    print(text, end="")
+    print(f"\n-> {args.out}/summary.md", file=sys.stderr)
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="python -m repro.experiments",
+                                 description=__doc__)
+    sub = ap.add_subparsers(dest="cmd", required=True)
+
+    p = sub.add_parser("list", help="list named scenarios")
+    p.add_argument("--verbose", action="store_true")
+    p.set_defaults(fn=cmd_list)
+
+    p = sub.add_parser("show", help="print one scenario's full config")
+    p.add_argument("--scenario", required=True)
+    p.set_defaults(fn=cmd_show)
+
+    p = sub.add_parser("run", help="run a scenario end-to-end")
+    p.add_argument("--scenario", default=None)
+    p.add_argument("--all", action="store_true",
+                   help="run every registered scenario")
+    p.add_argument("--out", default=runner.DEFAULT_OUT_DIR)
+    p.add_argument("--seed", type=int, default=None,
+                   help="override the scenario's seed")
+    p.add_argument("--force", action="store_true",
+                   help="ignore cached results")
+    p.set_defaults(fn=cmd_run)
+
+    p = sub.add_parser("report", help="aggregate results into summary.md")
+    p.add_argument("--out", default=runner.DEFAULT_OUT_DIR)
+    p.set_defaults(fn=cmd_report)
+
+    args = ap.parse_args(argv)
+    try:
+        return args.fn(args)
+    except KeyError as e:
+        # unknown scenario name: clean message, not a traceback
+        print(f"error: {e.args[0]}", file=sys.stderr)
+        return 2
+
+
+if __name__ == "__main__":
+    sys.exit(main())

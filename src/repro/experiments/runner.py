@@ -1,0 +1,216 @@
+"""Scenario runner: registry entry -> search -> metrics -> artifacts.
+
+The hot path is the batched population evaluation: one jitted cost-model
+call scores a whole (P, n_params) population against every workload at
+once, so a GA generation stays two device computations (score + step)
+regardless of population or workload-set size. On a multi-device
+runtime the population axis is sharded over the mesh 'data' axis
+(core/distributed.make_sharded_scorer); populations that do not divide
+the device count are padded with repeats and the scores sliced back.
+
+Results cache per scenario under ``<out_dir>/<scenario>/``:
+  result.json          — full metrics (report.py schema)
+  report.md            — human-readable table
+  specific_<wl>.json   — per-workload specific-search sub-results,
+                         written as they finish so an interrupted run
+                         resumes without redoing completed searches.
+Re-running a completed scenario returns the cached result unless
+``force=True``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+from typing import Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import (SearchResult, SearchSpace, WorkloadArrays,
+                    joint_search, make_evaluator, make_objective, pack,
+                    plain_ga_search, random_search)
+from ..core.distributed import make_sharded_scorer
+from ..core.objectives import Objective, per_workload_scores
+from . import report
+from .scenarios import Budget, Scenario
+
+DEFAULT_OUT_DIR = os.path.join("experiments", "results")
+
+
+def make_scorer(space: SearchSpace, wa: WorkloadArrays,
+                objective: Objective) -> Tuple[Callable, Callable]:
+    """(score_fn, evaluator) for a scenario.
+
+    score_fn: (P, n) genomes -> (P,) scores, sharded over the mesh
+    'data' axis when more than one device is visible. evaluator is the
+    locally-jitted CostMetrics function (capacity filter, final
+    metrics — tiny batches, not worth sharding).
+    """
+    evaluator = make_evaluator(space, wa)
+    n_dev = jax.device_count()
+    if n_dev <= 1:
+        def score_fn(genomes):
+            return objective(evaluator(genomes))
+        return score_fn, evaluator
+
+    mesh = jax.make_mesh((n_dev,), ("data",))
+    sharded = make_sharded_scorer(space, wa, objective, mesh)
+
+    def score_fn(genomes):
+        P = genomes.shape[0]
+        pad = (-P) % n_dev
+        if pad:
+            genomes = jnp.concatenate(
+                [genomes, jnp.repeat(genomes[:1], pad, axis=0)], axis=0)
+        return sharded(genomes)[:P]
+
+    return score_fn, evaluator
+
+
+def run_search(scenario: Scenario, space: SearchSpace,
+               score_fn: Callable, capacity_filter,
+               seed: int) -> SearchResult:
+    """Dispatch one search with the scenario's algorithm and budget."""
+    b = scenario.budget
+    key = jax.random.PRNGKey(seed)
+    if scenario.algorithm == "fourphase":
+        return joint_search(key, space, score_fn, p_h=b.p_h, p_e=b.p_e,
+                            p_ga=b.p_ga,
+                            generations_per_phase=b.generations,
+                            capacity_filter=capacity_filter)
+    if scenario.algorithm == "plain":
+        return plain_ga_search(key, space, score_fn, p_ga=b.p_ga,
+                               total_generations=b.total_generations,
+                               capacity_filter=capacity_filter)
+    if scenario.algorithm == "random":
+        return random_search(key, space, score_fn,
+                             n_evals=b.n_evaluations,
+                             capacity_filter=capacity_filter)
+    raise ValueError(f"unknown algorithm {scenario.algorithm!r}")
+
+
+def _design_metrics(space: SearchSpace, evaluator: Callable,
+                    genome: np.ndarray, objective: Objective,
+                    names) -> Dict:
+    m = evaluator(jnp.asarray(np.asarray(genome)[None]))
+    edap = np.asarray(per_workload_scores(m, "edap"))[0]
+    return {
+        "design": space.decode(genome),
+        "objective_score": float(objective(m)[0]),
+        "area_mm2": float(m.area[0]),
+        "feasible": bool(m.feasible[0]),
+        "per_workload": {
+            n: {"energy_mJ": float(m.energy[0, i]) * 1e3,
+                "latency_ms": float(m.latency[0, i]) * 1e3,
+                "edap": float(edap[i])}
+            for i, n in enumerate(names)
+        },
+    }
+
+
+def _single_workload(scenario: Scenario, wl_name: str) -> Scenario:
+    """The workload-specific counterpart of a multi-workload scenario."""
+    return dataclasses.replace(
+        scenario, name=f"{scenario.name}/specific_{wl_name}",
+        workloads=(wl_name,), specific_baselines=False)
+
+
+def run_scenario(scenario: Scenario,
+                 out_dir: str = DEFAULT_OUT_DIR,
+                 force: bool = False,
+                 seed: Optional[int] = None,
+                 write: bool = True) -> Dict:
+    """Execute one scenario end-to-end; returns the result dict.
+
+    Idempotent: a completed scenario loads from cache unless ``force``.
+    ``write=False`` skips all filesystem I/O (tests, library use).
+    """
+    seed = scenario.seed if seed is None else seed
+    sdir = os.path.join(out_dir, scenario.name)
+    cache = os.path.join(sdir, "result.json")
+    if write and not force and os.path.exists(cache):
+        with open(cache) as f:
+            cached = json.load(f)
+        if cached.get("seed") == seed:
+            cached["cached"] = True
+            return cached
+
+    t0 = time.perf_counter()
+    space = scenario.space()
+    workloads = scenario.resolve_workloads()
+    wa = pack(workloads)
+    objective = make_objective(scenario.objective)
+    score_fn, evaluator = make_scorer(space, wa, objective)
+    cap = None
+    if scenario.mem == "rram":
+        def cap(g):
+            return np.asarray(evaluator(jnp.asarray(g)).feasible)
+
+    res = run_search(scenario, space, score_fn, cap, seed)
+    result: Dict = {
+        "scenario": scenario.name,
+        "mem": scenario.mem,
+        "algorithm": scenario.algorithm,
+        "objective": scenario.objective,
+        "paper_ref": scenario.paper_ref,
+        "description": scenario.description,
+        "seed": seed,
+        "workloads": list(wa.names),
+        "best_score": float(res.best_score),
+        "generalized": _design_metrics(space, evaluator, res.best_genome,
+                                       objective, wa.names),
+        "history": np.asarray(res.history).tolist(),
+        "search_wall_time_s": res.wall_time_s,
+        "sampling_time_s": res.sampling_time_s,
+        "cached": False,
+    }
+
+    # Workload-specific baselines: the same algorithm/budget aimed at
+    # each workload alone — the normalization the paper's gap claims
+    # (and Fig. 5) are built on.
+    if scenario.specific_baselines and len(workloads) > 1:
+        if write:
+            os.makedirs(sdir, exist_ok=True)
+        specific: Dict[str, Dict] = {}
+        for i, w in enumerate(workloads):
+            spath = os.path.join(sdir, f"specific_{w.name}.json")
+            sub = None
+            if write and not force and os.path.exists(spath):
+                with open(spath) as f:
+                    loaded = json.load(f)
+                # a stale sub-result from another seed would silently
+                # mix seeds into the gap computation — re-run instead
+                if loaded.get("seed") == seed:
+                    sub = loaded
+            if sub is None:
+                sub_sc = _single_workload(scenario, w.name)
+                sub_wa = pack([w])
+                sub_score, sub_ev = make_scorer(space, sub_wa, objective)
+                sub_cap = None
+                if scenario.mem == "rram":
+                    def sub_cap(g, _ev=sub_ev):
+                        return np.asarray(_ev(jnp.asarray(g)).feasible)
+                r = run_search(sub_sc, space, sub_score, sub_cap,
+                               seed=seed + 1000 + i)
+                sub = _design_metrics(space, sub_ev, r.best_genome,
+                                      objective, sub_wa.names)
+                sub["best_score"] = float(r.best_score)
+                sub["seed"] = seed
+                if write:
+                    with open(spath, "w") as f:
+                        json.dump(sub, f, indent=1)
+            specific[w.name] = sub
+        result["specific"] = {
+            n: {"design": s["design"],
+                "edap": s["per_workload"][n]["edap"]}
+            for n, s in specific.items()
+        }
+        result["gap"] = report.compute_gap(result)
+
+    result["wall_time_s"] = time.perf_counter() - t0
+    if write:
+        report.write_artifacts(result, sdir)
+    return result

@@ -1,0 +1,168 @@
+"""Declarative scenario registry for the paper's design points.
+
+Each Scenario names one cell of the paper's evaluation grid —
+{RRAM, SRAM} x {single-workload, small-set/4, large-set/9} x
+{optimized 4-phase GA, plain GA, random-search baseline} — plus the
+beyond-paper LM-architecture set and tiny CPU smoke scenarios. The
+registry is data, not code: the runner (runner.py) interprets it, the
+report layer (report.py) tabulates it, and README.md's "How to
+reproduce the tables" section is verified against it by
+tests/test_experiments.py.
+
+Workload sets resolve through core.workloads (paper CNNs/transformers)
+or configs/ (the assigned LM architectures via from_arch_config);
+search settings resolve through core.search_space.get_space.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Tuple
+
+from ..core import (PAPER_4, PAPER_9, SearchSpace, Workload,
+                    from_arch_config, get_space, get_workload_set)
+
+# Largest paper workload: the single-workload (specialized) design point
+# the cross-workload comparisons normalize against (paper Fig. 3).
+LARGEST_WORKLOAD = "vgg16"
+
+# The assigned LM architectures exported as IMC workloads (examples/
+# codesign_lm_archs.py scenario, beyond-paper).
+LM_ARCHS = ("qwen3_4b", "qwen2_5_3b", "xlstm_350m", "hubert_xlarge",
+            "phi4_mini_3_8b")
+
+ALGORITHMS = ("fourphase", "plain", "random")
+
+
+@dataclasses.dataclass(frozen=True)
+class Budget:
+    """Search budget knobs (paper Algorithm 1 symbols).
+
+    p_h/p_e/p_ga: Hamming-sampling pool / diverse subset / GA population.
+    generations: per phase (4-phase GA runs 4x this; plain GA and random
+    search get the equal total budget — see runner.py).
+    """
+    p_h: int = 300
+    p_e: int = 120
+    p_ga: int = 24
+    generations: int = 4
+
+    @property
+    def total_generations(self) -> int:
+        return 4 * self.generations
+
+    @property
+    def n_evaluations(self) -> int:
+        """Evaluation budget of the 4-phase search at this scale — the
+        budget-fair allowance for the random-search baseline."""
+        return self.p_h + self.p_ga * self.total_generations
+
+
+# Reduced relative to the paper's 64-core scale (P_H=1000/P_E=500/G=10),
+# matching benchmarks/common.py; qualitative claims are scale-robust.
+DEFAULT_BUDGET = Budget()
+# Tiny budget for CPU smoke runs and CI.
+SMOKE_BUDGET = Budget(p_h=40, p_e=16, p_ga=8, generations=1)
+
+
+@dataclasses.dataclass(frozen=True)
+class Scenario:
+    """One named, fully-resolved experiment design point."""
+    name: str
+    mem: str                       # "rram" | "sram"
+    workloads: Tuple[str, ...]     # paper workload names OR arch ids
+    algorithm: str                 # "fourphase" | "plain" | "random"
+    objective: str = "edap:mean"   # core.objectives.make_objective spec
+    budget: Budget = DEFAULT_BUDGET
+    seed: int = 0
+    seq: int = 256                 # sequence length for arch workloads
+    tech_variable: bool = False
+    workload_source: str = "paper"  # "paper" | "archs"
+    specific_baselines: bool = True  # per-workload specific searches
+    paper_ref: str = ""
+    description: str = ""
+
+    def space(self) -> SearchSpace:
+        return get_space(self.mem, self.tech_variable)
+
+    def resolve_workloads(self) -> List[Workload]:
+        if self.workload_source == "archs":
+            from ..configs import get_config
+            return [from_arch_config(get_config(a), seq=self.seq)
+                    for a in self.workloads]
+        return get_workload_set(self.workloads)
+
+
+def _build_registry() -> Dict[str, Scenario]:
+    reg: Dict[str, Scenario] = {}
+
+    def add(s: Scenario) -> None:
+        assert s.name not in reg, f"duplicate scenario {s.name!r}"
+        reg[s.name] = s
+
+    alg_label = {"fourphase": "optimized 4-phase GA",
+                 "plain": "plain (non-modified) GA",
+                 "random": "random-search baseline"}
+    set_specs = {
+        "single": ((LARGEST_WORKLOAD,),
+                   "single workload (largest: VGG16)", "Fig. 3"),
+        "small_set": (PAPER_4, "small set (4 workloads)", "Table 1"),
+        "large_set": (PAPER_9, "large set (9 workloads)", "Table 2"),
+    }
+    for mem in ("rram", "sram"):
+        for set_name, (wls, set_label, ref) in set_specs.items():
+            for alg in ALGORITHMS:
+                name = f"{mem}_{set_name}"
+                if alg != "fourphase":
+                    name += f"_{alg}"
+                add(Scenario(
+                    name=name, mem=mem, workloads=tuple(wls),
+                    algorithm=alg,
+                    # single-workload: no cross-workload gap to measure
+                    specific_baselines=(set_name != "single"),
+                    paper_ref=ref,
+                    description=(f"{mem.upper()} IMC, {set_label}, "
+                                 f"{alg_label[alg]}"),
+                ))
+        # tiny CPU smoke scenario per memory (CI / quickstart)
+        add(Scenario(
+            name=f"{mem}_smoke", mem=mem,
+            workloads=("resnet18", "alexnet"),
+            algorithm="fourphase", budget=SMOKE_BUDGET,
+            paper_ref="(smoke)",
+            description=(f"{mem.upper()} tiny 2-workload smoke run "
+                         "(seconds on CPU)"),
+        ))
+    # beyond-paper: generalized SRAM design for the assigned LM archs
+    add(Scenario(
+        name="sram_lm_archs", mem="sram", workloads=LM_ARCHS,
+        algorithm="fourphase", workload_source="archs", seq=256,
+        paper_ref="(beyond paper)",
+        description=("SRAM IMC co-optimized for the assigned LM "
+                     "architecture set (examples/codesign_lm_archs.py)"),
+    ))
+    return reg
+
+
+REGISTRY: Dict[str, Scenario] = _build_registry()
+
+
+def scenario_names() -> List[str]:
+    return list(REGISTRY)
+
+
+def get_scenario(name: str) -> Scenario:
+    try:
+        return REGISTRY[name]
+    except KeyError:
+        known = ", ".join(REGISTRY)
+        raise KeyError(f"unknown scenario {name!r}; known: {known}") \
+            from None
+
+
+def paper_table_scenarios() -> Dict[str, List[str]]:
+    """paper_ref -> scenario names, for the README reproduce-tables
+    section and the cross-scenario summary report."""
+    out: Dict[str, List[str]] = {}
+    for s in REGISTRY.values():
+        out.setdefault(s.paper_ref, []).append(s.name)
+    return out

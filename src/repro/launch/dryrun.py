@@ -37,7 +37,7 @@ from ..parallel.sharding import (batch_partition_spec, cache_specs,
                                  shardings_from_specs, zero1_specs)
 from ..train.loop import init_train_state, make_train_step
 from ..train.optimizer import adamw_init
-from .mesh import make_production_mesh
+from .mesh import make_production_mesh, mesh_context
 
 COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
                "collective-permute")
@@ -191,7 +191,7 @@ def lower_cell(cfg: ArchConfig, shape_name: str, mesh: Mesh,
         fn = jax.jit(step_fn,
                      in_shardings=(state_shardings, b_shard),
                      out_shardings=(state_shardings, None))
-        with jax.set_mesh(mesh):
+        with mesh_context(mesh):
             lowered = fn.lower(state_shapes, batch_shapes)
         tokens = B * S
         model_flops = 6.0 * cfg.active_param_count() * tokens

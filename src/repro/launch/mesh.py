@@ -3,6 +3,10 @@
 Axes: ("pod", "data", "model"). Single pod = 256 chips (16 x 16);
 multi-pod = 2 pods = 512 chips. A FUNCTION (not module-level constant)
 so importing never touches jax device state.
+
+Compatible with both jax API generations: explicit-sharding Auto axis
+types and ``jax.set_mesh`` where available (jax >= 0.5), the plain
+``jax.make_mesh`` + legacy Mesh context manager otherwise.
 """
 from __future__ import annotations
 
@@ -10,19 +14,31 @@ import jax
 from jax.sharding import Mesh
 
 
-def _auto(n: int):
-    return (jax.sharding.AxisType.Auto,) * n
+def _make_mesh(shape, axes) -> Mesh:
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return jax.make_mesh(shape, axes)
+    return jax.make_mesh(shape, axes,
+                         axis_types=(axis_type.Auto,) * len(axes))
+
+
+def mesh_context(mesh: Mesh):
+    """``jax.set_mesh(mesh)`` when available, else the legacy Mesh
+    context manager — both scope `in/out_shardings` name resolution."""
+    set_mesh = getattr(jax, "set_mesh", None)
+    if set_mesh is not None:
+        return set_mesh(mesh)
+    return mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+    return _make_mesh(shape, axes)
 
 
 def make_host_mesh(model: int = 1) -> Mesh:
     """Small mesh over whatever devices exist (tests / CPU smoke)."""
     n = len(jax.devices())
     assert n % model == 0
-    return jax.make_mesh((n // model, model), ("data", "model"),
-                         axis_types=_auto(2))
+    return _make_mesh((n // model, model), ("data", "model"))

@@ -1,101 +1,114 @@
 """Run the paper's joint hardware-workload co-optimization.
 
-Usage:
+A thin CLI over the experiment runner (repro/experiments/): flags are
+assembled into an ad-hoc Scenario and executed by runner.run_scenario,
+so searches launched here get the same shard-aware batched population
+evaluation, caching, and JSON/markdown artifacts as named scenarios.
+
+  python -m repro.launch.search --scenario rram_small_set
   python -m repro.launch.search --mem rram --objective edap --agg max \
-      --workloads paper4 [--archs recurrentgemma_9b,qwen3_4b,...] \
-      [--algorithm fourphase|plain] [--generations 10] [--pga 40]
+      --workloads paper4 [--algorithm fourphase|plain|random] \
+      [--generations 10] [--pga 40] [--out DIR]
 
 Workload sets: paper4, paper9, archs (the assigned LM architectures via
-core.workloads.from_arch_config), or an explicit comma list.
-
-On a multi-device runtime the population evaluation shards over the
-mesh 'data' axis (core/distributed.py); on this 1-CPU container it runs
-locally jitted.
+core.workloads.from_arch_config), or an explicit comma list. For the
+named design points prefer ``python -m repro.experiments run``.
 """
 from __future__ import annotations
 
 import argparse
 import json
 
-import jax
-import numpy as np
-
-from ..configs import ARCH_IDS, get_config
-from ..core import (FOUR_PHASES, Objective, get_space, joint_search,
-                    make_evaluator, pack, plain_ga_search, PAPER_4, PAPER_9,
-                    get_workload_set, from_arch_config)
+from ..configs import ARCH_IDS
+from ..core import PAPER_4, PAPER_9
+from ..experiments import (Budget, Scenario, get_scenario, run_scenario,
+                           DEFAULT_OUT_DIR)
 
 
-def build_workloads(spec: str, seq: int = 512):
+def build_workload_spec(spec: str):
+    """CLI spec -> (workload names, source) for the Scenario."""
     if spec == "paper4":
-        return get_workload_set(PAPER_4)
+        return PAPER_4, "paper"
     if spec == "paper9":
-        return get_workload_set(PAPER_9)
+        return PAPER_9, "paper"
     if spec == "archs":
-        return [from_arch_config(get_config(a), seq=seq) for a in ARCH_IDS]
-    names = spec.split(",")
+        return ARCH_IDS, "archs"
+    names = tuple(spec.split(","))
     if all(n in ARCH_IDS for n in names):
-        return [from_arch_config(get_config(n), seq=seq) for n in names]
-    return get_workload_set(names)
+        return names, "archs"
+    return names, "paper"
+
+
+def scenario_from_args(args) -> Scenario:
+    workloads, source = build_workload_spec(args.workloads)
+    # every flag that changes the result is part of the cache key
+    name = (f"cli_{args.mem}_{args.workloads.replace(',', '+')}"
+            f"_{args.algorithm}_{args.objective}_{args.agg}"
+            f"_g{args.generations}_p{args.pga}-{args.ph}-{args.pe}"
+            f"_s{args.seq}" + ("_tech" if args.tech_variable else ""))
+    return Scenario(
+        name=name, mem=args.mem, workloads=tuple(workloads),
+        algorithm=args.algorithm,
+        objective=f"{args.objective}:{args.agg}",
+        budget=Budget(p_h=args.ph, p_e=args.pe, p_ga=args.pga,
+                      generations=args.generations),
+        seed=args.seed, seq=args.seq, tech_variable=args.tech_variable,
+        workload_source=source,
+        specific_baselines=args.specific_baselines,
+        description="ad-hoc CLI scenario (launch/search.py)",
+    )
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
+    ap.add_argument("--scenario", default=None,
+                    help="run a named registry scenario instead of flags")
     ap.add_argument("--mem", default="rram", choices=["rram", "sram"])
     ap.add_argument("--objective", default="edap")
     ap.add_argument("--agg", default="max", choices=["max", "mean", "all"])
     ap.add_argument("--workloads", default="paper4")
     ap.add_argument("--algorithm", default="fourphase",
-                    choices=["fourphase", "plain"])
+                    choices=["fourphase", "plain", "random"])
     ap.add_argument("--tech-variable", action="store_true")
     ap.add_argument("--generations", type=int, default=10)
     ap.add_argument("--pga", type=int, default=40)
     ap.add_argument("--ph", type=int, default=1000)
     ap.add_argument("--pe", type=int, default=500)
+    ap.add_argument("--seq", type=int, default=512)
     ap.add_argument("--seed", type=int, default=0)
-    ap.add_argument("--out", default=None)
+    ap.add_argument("--specific-baselines", action="store_true",
+                    help="also run per-workload specific searches (gap)")
+    ap.add_argument("--out", default=None,
+                    help="results directory (default: print only)")
+    ap.add_argument("--force", action="store_true",
+                    help="ignore cached results under --out")
     args = ap.parse_args()
 
-    space = get_space(args.mem, args.tech_variable)
-    wls = build_workloads(args.workloads)
-    wa = pack(wls)
-    ev = make_evaluator(space, wa)
-    obj = Objective(args.objective, args.agg)
-
-    def score_fn(g):
-        return obj(ev(g))
-
-    cap_filter = None
-    if args.mem == "rram":
-        cap_filter = lambda g: np.asarray(ev(jax.numpy.asarray(g)).feasible)
-
-    key = jax.random.PRNGKey(args.seed)
-    if args.algorithm == "fourphase":
-        res = joint_search(key, space, score_fn, p_h=args.ph, p_e=args.pe,
-                           p_ga=args.pga,
-                           generations_per_phase=args.generations,
-                           capacity_filter=cap_filter)
+    if args.scenario is not None:
+        sc = get_scenario(args.scenario)
     else:
-        res = plain_ga_search(key, space, score_fn, p_ga=args.pga,
-                              total_generations=4 * args.generations,
-                              capacity_filter=cap_filter)
+        sc = scenario_from_args(args)
+    res = run_scenario(sc, out_dir=args.out or DEFAULT_OUT_DIR,
+                       force=args.force, write=args.out is not None)
 
-    m = ev(jax.numpy.asarray(res.best_genome[None]))
+    g = res["generalized"]
     report = {
-        "workloads": [w.name for w in wls],
-        "mem": args.mem, "objective": args.objective, "agg": args.agg,
-        "best_score": float(res.best_score),
-        "best_design": space.decode(res.best_genome),
-        "per_workload_energy_mJ": (np.asarray(m.energy[0]) * 1e3).tolist(),
-        "per_workload_latency_ms": (np.asarray(m.latency[0]) * 1e3).tolist(),
-        "area_mm2": float(m.area[0]),
-        "wall_time_s": res.wall_time_s,
-        "sampling_time_s": res.sampling_time_s,
+        "scenario": res["scenario"],
+        "workloads": res["workloads"],
+        "mem": res["mem"], "objective": res["objective"],
+        "best_score": res["best_score"],
+        "best_design": g["design"],
+        "per_workload_energy_mJ": [
+            m["energy_mJ"] for m in g["per_workload"].values()],
+        "per_workload_latency_ms": [
+            m["latency_ms"] for m in g["per_workload"].values()],
+        "area_mm2": g["area_mm2"],
+        "wall_time_s": res["wall_time_s"],
+        "sampling_time_s": res["sampling_time_s"],
     }
+    if "gap" in res:
+        report["gap_mean_pct"] = res["gap"]["mean_pct"]
     print(json.dumps(report, indent=1))
-    if args.out:
-        with open(args.out, "w") as f:
-            json.dump(report, f, indent=1)
 
 
 if __name__ == "__main__":

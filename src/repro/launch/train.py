@@ -22,7 +22,7 @@ from ..data import SyntheticTokenPipeline
 from ..models import init_params
 from ..parallel.sharding import shardings_from_specs
 from ..train.loop import init_train_state, make_train_step, train_loop
-from .mesh import make_host_mesh
+from .mesh import make_host_mesh, mesh_context
 
 
 def main() -> None:
@@ -46,7 +46,7 @@ def main() -> None:
           f"mesh={dict(mesh.shape)}")
 
     key = jax.random.PRNGKey(args.seed)
-    with jax.set_mesh(mesh):
+    with mesh_context(mesh):
         params, specs = init_params(key, cfg,
                                     n_shards=mesh.shape["model"])
         shardings = shardings_from_specs(mesh, specs)

@@ -1,0 +1,196 @@
+"""Scenario registry, runner, report layer, and the README contract."""
+import dataclasses
+import json
+import os
+import re
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import make_objective, random_search, get_space
+from repro.experiments import (Budget, REGISTRY, Scenario, compute_gap,
+                               baseline_reductions, get_scenario,
+                               render_markdown, render_summary,
+                               run_scenario, scenario_names)
+
+REPO_ROOT = os.path.join(os.path.dirname(__file__), os.pardir)
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+def test_registry_exposes_paper_grid():
+    names = scenario_names()
+    assert len(names) >= 6
+    assert len(set(names)) == len(names)
+    # the paper's grid: both memories x both set sizes x all algorithms
+    for mem in ("rram", "sram"):
+        for s in ("small_set", "large_set"):
+            assert f"{mem}_{s}" in names
+            assert f"{mem}_{s}_plain" in names
+            assert f"{mem}_{s}_random" in names
+        assert f"{mem}_smoke" in names
+
+
+def test_every_scenario_resolves():
+    for name in scenario_names():
+        sc = get_scenario(name)
+        space = sc.space()
+        wls = sc.resolve_workloads()
+        assert space.mem_type == sc.mem
+        assert len(wls) == len(sc.workloads)
+        assert all(w.n_layers > 0 for w in wls)
+        make_objective(sc.objective)  # parses
+        assert sc.algorithm in ("fourphase", "plain", "random")
+        assert sc.budget.n_evaluations > 0
+
+
+def test_get_scenario_unknown_name():
+    with pytest.raises(KeyError, match="unknown scenario"):
+        get_scenario("nope")
+
+
+def test_make_objective_specs():
+    assert make_objective("edap").aggregation == "max"
+    assert make_objective("edp:mean").kind == "edp"
+    with pytest.raises(ValueError):
+        make_objective("bogus")
+    with pytest.raises(ValueError):
+        make_objective("edap:bogus")
+
+
+# ---------------------------------------------------------------------------
+# runner
+# ---------------------------------------------------------------------------
+
+TINY = Scenario(
+    name="tiny_test", mem="sram", workloads=("alexnet", "resnet18"),
+    algorithm="fourphase", budget=Budget(p_h=16, p_e=8, p_ga=6,
+                                         generations=1),
+    description="test-only tiny scenario")
+
+
+def test_runner_smoke_writes_artifacts(tmp_path):
+    out = str(tmp_path)
+    res = run_scenario(TINY, out_dir=out)
+    assert not res["cached"]
+    assert res["best_score"] < 1e29  # found a feasible design
+    g = res["generalized"]
+    assert set(g["per_workload"]) == {"alexnet", "resnet18"}
+    for m in g["per_workload"].values():
+        assert m["edap"] > 0
+    # gap (workload-specific vs generalized) present and finite
+    assert np.isfinite(res["gap"]["mean_pct"])
+    # artifacts on disk
+    sdir = os.path.join(out, "tiny_test")
+    with open(os.path.join(sdir, "result.json")) as f:
+        on_disk = json.load(f)
+    assert on_disk["best_score"] == res["best_score"]
+    md = open(os.path.join(sdir, "report.md")).read()
+    assert "EDAP" in md and "gap" in md
+    # per-workload specific sub-results cached for resumability
+    assert os.path.exists(os.path.join(sdir, "specific_alexnet.json"))
+    # second run is a cache hit
+    res2 = run_scenario(TINY, out_dir=out)
+    assert res2["cached"]
+    assert res2["best_score"] == res["best_score"]
+    # a different seed misses the cache AND re-runs the specific
+    # baselines (sub-caches record their seed; no silent seed mixing)
+    res3 = run_scenario(TINY, out_dir=out, seed=7)
+    assert not res3["cached"]
+    with open(os.path.join(sdir, "specific_alexnet.json")) as f:
+        assert json.load(f)["seed"] == 7
+
+
+def test_runner_algorithms_dispatch(tmp_path):
+    for alg in ("plain", "random"):
+        sc = dataclasses.replace(TINY, name=f"tiny_{alg}", algorithm=alg,
+                                 specific_baselines=False)
+        res = run_scenario(sc, write=False)
+        assert res["algorithm"] == alg
+        assert np.isfinite(res["best_score"])
+        assert "gap" not in res
+
+
+def test_random_search_deterministic():
+    space = get_space("sram")
+    obj = make_objective("edap:mean")
+    from repro.core import make_evaluator, pack, get_workload_set
+    ev = make_evaluator(space, pack(get_workload_set(("alexnet",))))
+    sf = lambda g: obj(ev(g))
+    r1 = random_search(jax.random.PRNGKey(3), space, sf, n_evals=50)
+    r2 = random_search(jax.random.PRNGKey(3), space, sf, n_evals=50)
+    assert r1.best_score == r2.best_score
+    assert np.array_equal(r1.best_genome, r2.best_genome)
+
+
+# ---------------------------------------------------------------------------
+# report layer (canned results, no search)
+# ---------------------------------------------------------------------------
+
+def _canned(name, alg, score, gap=True):
+    per = {"wl_a": {"energy_mJ": 1.0, "latency_ms": 2.0, "edap": 20.0},
+           "wl_b": {"energy_mJ": 3.0, "latency_ms": 4.0, "edap": 60.0}}
+    r = {"scenario": name, "mem": "rram", "algorithm": alg,
+         "objective": "edap:mean", "paper_ref": "Table 1",
+         "description": "canned", "seed": 0,
+         "workloads": ["wl_a", "wl_b"], "best_score": score,
+         "generalized": {"design": {"xbar_rows": 256.0},
+                         "objective_score": score, "area_mm2": 10.0,
+                         "feasible": True, "per_workload": per},
+         "history": [score], "search_wall_time_s": 1.0,
+         "sampling_time_s": 0.1, "wall_time_s": 1.1, "cached": False}
+    if gap:
+        r["specific"] = {"wl_a": {"design": {}, "edap": 16.0},
+                         "wl_b": {"design": {}, "edap": 50.0}}
+        r["gap"] = compute_gap(r)
+    return r
+
+
+def test_compute_gap_values():
+    r = _canned("x", "fourphase", 40.0)
+    g = r["gap"]["per_workload_pct"]
+    assert g["wl_a"] == pytest.approx(25.0)   # 20/16 - 1
+    assert g["wl_b"] == pytest.approx(20.0)   # 60/50 - 1
+    assert r["gap"]["mean_pct"] == pytest.approx(22.5)
+    assert r["gap"]["max_pct"] == pytest.approx(25.0)
+
+
+def test_render_markdown_canned():
+    md = render_markdown(_canned("x", "fourphase", 40.0))
+    assert "| wl_a | 1 | 2 | 20 | 16 | 25 |" in md
+    assert "mean 22.5%" in md
+
+
+def test_summary_pairs_baselines():
+    results = [_canned("rram_small_set", "fourphase", 25.0),
+               _canned("rram_small_set_plain", "plain", 50.0, gap=False),
+               _canned("rram_small_set_random", "random", 100.0,
+                       gap=False)]
+    red = baseline_reductions(results)
+    assert red["rram_small_set"]["plain"] == pytest.approx(50.0)
+    assert red["rram_small_set"]["random"] == pytest.approx(75.0)
+    md = render_summary(results)
+    assert md.count("| rram_small_set") == 3
+    assert "| 50 |" in md and "| 75 |" in md
+
+
+# ---------------------------------------------------------------------------
+# README contract: reproduce-table commands == registry names
+# ---------------------------------------------------------------------------
+
+def test_readme_commands_match_registry():
+    readme = open(os.path.join(REPO_ROOT, "README.md")).read()
+    commanded = set(re.findall(r"--scenario\s+(\S+)", readme))
+    registered = set(scenario_names())
+    # every command in the README names a real scenario
+    assert commanded <= registered, commanded - registered
+    # every registered scenario is mentioned in the README
+    mentioned = {n for n in registered if re.search(rf"\b{n}\b", readme)}
+    assert mentioned == registered, registered - mentioned
+    # and the headline table scenarios are runnable commands
+    for must in ("rram_small_set", "rram_large_set", "sram_small_set",
+                 "sram_large_set", "rram_smoke"):
+        assert must in commanded

@@ -5,7 +5,7 @@ from jax.sharding import PartitionSpec as P
 
 from conftest import tiny_config
 from repro.configs import get_config
-from repro.launch.mesh import make_host_mesh
+from repro.launch.mesh import make_host_mesh, mesh_context
 from repro.models import init_params
 from repro.models.transformer import init_cache
 from repro.parallel.sharding import (batch_partition_spec, cache_specs,
@@ -80,7 +80,7 @@ def test_sharded_train_step_runs_on_host_mesh():
     cfg = tiny_config(n_layers=2)
     mesh = make_host_mesh()
     key = jax.random.PRNGKey(0)
-    with jax.set_mesh(mesh):
+    with mesh_context(mesh):
         params, specs = init_params(key, cfg, n_shards=mesh.shape["model"])
         shardings = shardings_from_specs(mesh, specs)
         params = jax.tree.map(jax.device_put, params, shardings)
