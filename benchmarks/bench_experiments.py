@@ -1,25 +1,59 @@
-"""Benchmarks for the experiment-runner hot path.
+"""Benchmarks for the experiment-runner hot path, and the CI perf gate.
 
-Two cells:
-  experiments_eval_hot   — steady-state batched population evaluation
-                           through runner.make_scorer (the per-
-                           generation device computation): us/call and
-                           design-evaluations/s at the benchmark
-                           population scale, PAPER_4 and PAPER_9.
-  experiments_smoke_run  — wall time of a full tiny scenario
-                           (search + specific baselines + report),
-                           write=False so only compute is measured.
+Cells:
+  experiments_eval_hot     — steady-state batched population evaluation
+                             through runner.make_scorer (the per-
+                             generation device computation): us/call
+                             and design-evaluations/s at the benchmark
+                             population scale, PAPER_4 and PAPER_9.
+  experiments_search_loop  — the tentpole metric: one full smoke-budget
+                             joint search, scan-compiled (one device
+                             call, zero per-generation host syncs) vs
+                             the reference host-driven loop. Steady
+                             state (compile excluded). The
+                             scan-vs-host speedup is the number the CI
+                             perf gate pins (benchmarks/baseline.json).
+  experiments_multiseed    — S independent seeds as ONE vmapped device
+                             call vs S sequential scan searches.
+  experiments_smoke_run    — wall time of a full tiny scenario
+                             (search + specific-baseline fan-out +
+                             report), write=False so only compute is
+                             measured.
+
+CLI (the CI bench job):
+  PYTHONPATH=src python -m benchmarks.bench_experiments \
+      --smoke --out bench_result.json
+writes the metrics as JSON for benchmarks/check_regression.py.
 """
 from __future__ import annotations
 
+import argparse
+import functools
+import json
 import time
+from typing import Dict, Optional
 
 import jax
+import jax.numpy as jnp
+import numpy as np
 
-from repro.core import make_objective, pack, random_genomes
-from repro.experiments import get_scenario, make_scorer, run_scenario
+from repro.core import (make_objective, pack, random_genomes,
+                        search_kernel, phase_schedule, FOUR_PHASES,
+                        joint_search)
+from repro.experiments import (get_scenario, make_scorer,
+                               make_traced_scorer, run_scenario)
 
 from .common import Bench
+
+# metric registry for the perf gate: name -> (higher_is_better, gated)
+_METRICS: Dict[str, Dict] = {}
+
+
+def _metric(name: str, value: float, higher_is_better: bool,
+            gated: bool) -> None:
+    _METRICS[name] = {"value": float(value),
+                      "higher_is_better": higher_is_better,
+                      "gated": gated}
 
 
 def experiments_eval_hot(pop: int = 512, iters: int = 30) -> None:
@@ -38,6 +72,103 @@ def experiments_eval_hot(pop: int = 512, iters: int = 30) -> None:
         Bench.record(f"experiments_eval_hot_{name}", dt,
                      f"pop{pop}_W{wa.n_workloads}_"
                      f"{pop / dt:.0f}designs_per_s")
+        _metric(f"eval_hot_{name}_s", dt, higher_is_better=False,
+                gated=False)
+
+
+def experiments_search_loop(iters: int = 8) -> None:
+    """Scan-compiled search vs host-driven loop at the smoke budget.
+
+    Both run the identical algorithm (Hamming init + 4-phase GA) on the
+    rram_smoke scenario; steady state — jits warmed before timing.
+    """
+    sc = get_scenario("rram_smoke")
+    b = sc.budget
+    space = sc.space()
+    wa = pack(sc.resolve_workloads())
+    obj = make_objective(sc.objective)
+    traced = make_traced_scorer(space, wa, obj)
+    host_score, evaluator = make_scorer(space, wa, obj)
+
+    def cap(g):
+        return np.asarray(evaluator(jnp.asarray(g)).feasible)
+
+    cards = jnp.asarray(space.cardinalities.astype(np.float32))
+    schedule = jnp.asarray(phase_schedule(FOUR_PHASES, b.generations))
+    kern = jax.jit(functools.partial(
+        search_kernel, cards=cards, schedule=schedule,
+        score_fn=traced.score, feasible_fn=traced.feasible,
+        p_h=b.p_h, p_e=b.p_e, p_ga=b.p_ga))
+
+    key = jax.random.PRNGKey(0)
+    jax.block_until_ready(kern(key))  # compile
+    t0 = time.perf_counter()
+    for i in range(iters):
+        out = kern(jax.random.PRNGKey(i))
+    jax.block_until_ready(out)
+    t_scan = (time.perf_counter() - t0) / iters
+
+    run_host = functools.partial(
+        joint_search, space=space, score_fn=host_score, p_h=b.p_h,
+        p_e=b.p_e, p_ga=b.p_ga, generations_per_phase=b.generations,
+        capacity_filter=cap, use_scan=False)
+    run_host(jax.random.PRNGKey(0))  # warm the step/score jits
+    t0 = time.perf_counter()
+    for i in range(iters):
+        run_host(jax.random.PRNGKey(i))
+    t_host = (time.perf_counter() - t0) / iters
+
+    speedup = t_host / t_scan
+    Bench.record("experiments_search_scan", t_scan,
+                 f"smoke_T{schedule.shape[0]}gen")
+    Bench.record("experiments_search_hostloop", t_host,
+                 f"scan_speedup_{speedup:.1f}x")
+    _metric("search_loop_scan_s", t_scan, higher_is_better=False,
+            gated=False)
+    _metric("search_loop_host_s", t_host, higher_is_better=False,
+            gated=False)
+    _metric("search_scan_speedup_x", speedup, higher_is_better=True,
+            gated=True)
+
+
+def experiments_multiseed(n_seeds: int = 4, iters: int = 4) -> None:
+    """S seeds in one vmapped device call vs S sequential scan calls."""
+    sc = get_scenario("rram_smoke")
+    b = sc.budget
+    space = sc.space()
+    wa = pack(sc.resolve_workloads())
+    traced = make_traced_scorer(space, wa,
+                                make_objective(sc.objective))
+    cards = jnp.asarray(space.cardinalities.astype(np.float32))
+    schedule = jnp.asarray(phase_schedule(FOUR_PHASES, b.generations))
+
+    def one(key):
+        return search_kernel(key, cards, schedule, traced.score,
+                             traced.feasible, p_h=b.p_h, p_e=b.p_e,
+                             p_ga=b.p_ga)
+
+    batched = jax.jit(jax.vmap(one))
+    single = jax.jit(one)
+    keys = jnp.stack([jax.random.PRNGKey(i) for i in range(n_seeds)])
+    jax.block_until_ready(batched(keys))
+    jax.block_until_ready(single(keys[0]))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = batched(keys)
+    jax.block_until_ready(out)
+    t_batch = (time.perf_counter() - t0) / iters
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        for i in range(n_seeds):
+            out = single(keys[i])
+    jax.block_until_ready(out)
+    t_seq = (time.perf_counter() - t0) / iters
+    Bench.record("experiments_multiseed_batched", t_batch,
+                 f"S{n_seeds}_vs_seq_{t_seq / t_batch:.2f}x")
+    _metric("multiseed_batched_s", t_batch, higher_is_better=False,
+            gated=False)
+    _metric("multiseed_batch_speedup_x", t_seq / t_batch,
+            higher_is_better=True, gated=False)
 
 
 def experiments_smoke_run() -> None:
@@ -46,8 +177,38 @@ def experiments_smoke_run() -> None:
     dt = time.perf_counter() - t0
     Bench.record("experiments_smoke_run", dt,
                  f"gap_{res['gap']['mean_pct']:.1f}pct")
+    _metric("smoke_run_s", dt, higher_is_better=False, gated=False)
 
 
 def experiments_runner() -> None:
     experiments_eval_hot()
+    experiments_search_loop()
+    experiments_multiseed()
     experiments_smoke_run()
+
+
+def main(argv: Optional[list] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m benchmarks.bench_experiments",
+        description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI mode: skip the large eval-hot cells, keep "
+                         "the search-loop gate metrics fast")
+    ap.add_argument("--out", default=None,
+                    help="write metrics JSON (bench_result.json)")
+    args = ap.parse_args(argv)
+    if args.smoke:
+        experiments_search_loop()
+        experiments_multiseed()
+        experiments_smoke_run()
+    else:
+        experiments_runner()
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump({"metrics": _METRICS}, f, indent=1, sort_keys=True)
+        print(f"-> {args.out}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

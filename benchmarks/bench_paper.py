@@ -22,7 +22,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (FOUR_PHASES, Objective, PAPER_4, PAPER_9,
+from repro.core import (Objective, PAPER_4, PAPER_9,
                         get_space, get_workload_set, joint_search,
                         make_evaluator, pack)
 from repro.core.nonideal import accuracy_proxy
@@ -30,7 +30,7 @@ from repro.core.objectives import per_workload_scores
 from repro.core.pareto import edap_cost_front
 from repro.core.sampling import random_genomes
 
-from .common import (Bench, G, P_E, P_GA, P_H, eval_design, run_joint,
+from .common import (Bench, G, eval_design, run_joint,
                      run_plain, setup)
 
 OUT = "experiments/paper"
@@ -194,7 +194,8 @@ def fig7_sequential_ablation():
     for mem in ("rram", "sram"):
         sp, wa, ev, _, cap = setup(mem)
         obj = Objective("edap", "mean")
-        sf = lambda g: obj(ev(g))
+        def sf(g, _obj=obj, _ev=ev):
+            return _obj(_ev(g))
         joint = run_joint(0, sp, sf, cap)
         seq_largest = sequential_search(sp, sf, init="largest")
         seq_median = sequential_search(sp, sf, init="median")
@@ -370,7 +371,8 @@ def table3_algorithms():
     from repro.core import make_evaluator as _mk
     ev = _mk(sp, wa)
     # pure EDAP landscape (no feasibility wall) — see tests/test_baselines
-    score_fn = lambda g: per_workload_scores(ev(g), "edap").mean(axis=1)
+    def score_fn(g):
+        return per_workload_scores(ev(g), "edap").mean(axis=1)
     combos = np.asarray(list(itertools.product(
         *[range(len(v)) for v in sp.values])), np.int32)
     scores = np.asarray(score_fn(jnp.asarray(combos)))

@@ -1,0 +1,103 @@
+"""CI perf gate: compare a bench_result.json to the committed baseline.
+
+  PYTHONPATH=src python -m benchmarks.check_regression \
+      [--result bench_result.json] \
+      [--baseline benchmarks/baseline.json] \
+      [--threshold 0.30] [--strict]
+
+A metric *regresses* when it moves in its bad direction by more than
+``threshold`` (relative): for higher-is-better metrics a drop below
+``baseline * (1 - threshold)``, for lower-is-better a rise above
+``baseline * (1 + threshold)``.
+
+Only metrics marked ``gated`` in the baseline fail the check by
+default. The gated search-loop metric is the *dimensionless*
+scan-vs-host-loop speedup, which is stable across runner hardware;
+absolute wall times are recorded but (without ``--strict``) only
+warned about, because CI runners vary too much for a 30% absolute
+gate to stay signal.
+
+Exit code 0 = pass, 1 = regression, 2 = bad input.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from typing import Dict, Optional, Tuple
+
+
+def regression_of(baseline: Dict, new: Dict) -> float:
+    """Relative movement in the bad direction (>0 means worse)."""
+    b, n = float(baseline["value"]), float(new["value"])
+    if b == 0:
+        return 0.0
+    if baseline.get("higher_is_better"):
+        return (b - n) / abs(b)
+    return (n - b) / abs(b)
+
+
+def check(result: Dict, baseline: Dict, threshold: float = 0.30,
+          strict: bool = False) -> Tuple[bool, list]:
+    """Returns (ok, report_lines)."""
+    lines = []
+    ok = True
+    base_metrics = baseline.get("metrics", {})
+    new_metrics = result.get("metrics", {})
+    for name, base in sorted(base_metrics.items()):
+        new = new_metrics.get(name)
+        gated = bool(base.get("gated")) or strict
+        if new is None:
+            lines.append(f"MISSING {name}: in baseline but not in result")
+            ok = ok and not gated
+            continue
+        reg = regression_of(base, new)
+        status = "ok"
+        if reg > threshold:
+            status = "REGRESSION" if gated else "warn"
+            if gated:
+                ok = False
+        word = "worse" if reg > 0 else "better"
+        lines.append(
+            f"{status:>10}  {name}: baseline {base['value']:.4g} -> "
+            f"{new['value']:.4g}  ({100 * abs(reg):.1f}% {word}, gate "
+            f"{'on' if gated else 'off'}, threshold "
+            f"{100 * threshold:.0f}%)")
+    for name in sorted(set(new_metrics) - set(base_metrics)):
+        lines.append(f"       new  {name}: {new_metrics[name]['value']:.4g}"
+                     " (not in baseline)")
+    return ok, lines
+
+
+def main(argv: Optional[list] = None) -> int:
+    here = os.path.dirname(os.path.abspath(__file__))
+    ap = argparse.ArgumentParser(
+        prog="python -m benchmarks.check_regression",
+        description=__doc__)
+    ap.add_argument("--result", default="bench_result.json")
+    ap.add_argument("--baseline",
+                    default=os.path.join(here, "baseline.json"))
+    ap.add_argument("--threshold", type=float, default=0.30)
+    ap.add_argument("--strict", action="store_true",
+                    help="gate every baseline metric, not just the "
+                         "ones marked gated")
+    args = ap.parse_args(argv)
+    try:
+        with open(args.result) as f:
+            result = json.load(f)
+        with open(args.baseline) as f:
+            baseline = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"check_regression: cannot load inputs: {e}",
+              file=sys.stderr)
+        return 2
+    ok, lines = check(result, baseline, threshold=args.threshold,
+                      strict=args.strict)
+    print("\n".join(lines))
+    print("perf gate:", "PASS" if ok else "FAIL")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

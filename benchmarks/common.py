@@ -8,14 +8,13 @@ tests/test_genetic.py at even smaller scales).
 """
 from __future__ import annotations
 
-import time
-from typing import Callable, Dict, Optional, Sequence, Tuple
+from typing import Dict
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (Objective, PAPER_4, PAPER_9, SearchResult,
+from repro.core import (Objective, PAPER_4, SearchResult,
                         from_arch_config, get_space, get_workload_set,
                         joint_search, make_evaluator, pack,
                         plain_ga_search)

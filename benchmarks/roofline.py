@@ -26,7 +26,6 @@ import json
 import os
 from typing import Dict, List, Optional
 
-import numpy as np
 
 from repro.configs import SHAPES, get_config
 from repro.models import ArchConfig

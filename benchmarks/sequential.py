@@ -10,7 +10,7 @@ not an under-budgeted optimizer.
 from __future__ import annotations
 
 import itertools
-from typing import Callable, Dict, List, Sequence
+from typing import Callable, Dict, Sequence
 
 import jax.numpy as jnp
 import numpy as np

@@ -8,9 +8,12 @@ from .cost_model import (CostMetrics, HWConstants, evaluate_population,
                          make_evaluator)
 from .objectives import (Objective, make_objective, per_workload_scores,
                          AREA_CONSTRAINT_MM2)
-from .sampling import hamming_select, random_genomes, sample_initial
-from .genetic import (FOUR_PHASES, PLAIN_PHASE, Phase, SearchResult,
-                      joint_search, plain_ga_search, random_search, run_ga)
+from .sampling import (hamming_select, random_genomes, sample_initial,
+                       sample_initial_device, uniform_genomes)
+from .genetic import (FOUR_PHASES, PLAIN_PHASE, MultiSearchResult, Phase,
+                      SearchResult, batched_joint_search, ga_scan,
+                      joint_search, phase_schedule, plain_ga_search,
+                      random_search, run_ga, run_ga_loop, search_kernel)
 from .workloads import (PAPER_4, PAPER_9, Workload, WorkloadArrays,
                         from_arch_config, get_workload, get_workload_set,
                         pack)

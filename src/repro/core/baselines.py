@@ -18,7 +18,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .genetic import _to_index, _to_real
+from .genetic import _to_index
 from .search_space import SearchSpace
 
 

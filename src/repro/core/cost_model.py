@@ -28,12 +28,10 @@ case, §III-A) are what the search consumes.
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Dict, NamedTuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from .search_space import (SearchSpace, TECH_COST_ALPHA, TECH_NODES_NM,
                            TECH_VMIN, TECH_VMAX, TECH_32NM_INDEX, V_NOM)
@@ -74,6 +72,11 @@ class CostMetrics(NamedTuple):
     area: jax.Array      # (P,) mm^2
     feasible: jax.Array  # (P,) bool — capacity feasibility (RRAM)
     cost: jax.Array      # (P,) normalized fabrication cost (alpha * area)
+    # per-workload capacity fit (all-true for SRAM): feasible == all
+    # workloads fit. Lets a full-set evaluation stand in for a
+    # single-workload pack (the specific-baseline fan-out in
+    # experiments/runner.py) without re-packing per workload.
+    feasible_w: jax.Array  # (P, W) bool
 
 
 # defaults for parameters a (reduced) space fixes rather than searches
@@ -172,8 +175,8 @@ def evaluate_population(space: SearchSpace, wl: WorkloadArrays,
         extra_w * cpw[:, None] / (rows * cols)[:, None])
     mapped_cells = mapped_xbars * (rows * cols)[:, None]         # (P, W)
     cap_ok = mapped_xbars <= n_xb[:, None]
-    feasible = jnp.all(cap_ok, axis=1) if is_rram else jnp.ones(
-        genomes.shape[0], bool)
+    feasible_w = cap_ok if is_rram else jnp.ones_like(cap_ok, bool)
+    feasible = jnp.all(feasible_w, axis=1)
     dup = jnp.clip(jnp.floor(n_xb[:, None] /
                              jnp.maximum(mapped_xbars, 1.0)),
                    1.0, c.max_duplication)
@@ -203,7 +206,8 @@ def evaluate_population(space: SearchSpace, wl: WorkloadArrays,
     e_spill = spill * c.e_dram
     l_spill = spill / c.dram_bw
 
-    sum_l = lambda x: x @ seg_onehot                            # (P, W)
+    def sum_l(x):                                               # (P, W)
+        return x @ seg_onehot
     # DRAM (external) energy does not scale with the on-chip node
     E = (sum_l(e_layer_dig) * e_scale[:, None]
          + sum_l(e_layer_adc) * e_scale_adc[:, None]
@@ -241,7 +245,7 @@ def evaluate_population(space: SearchSpace, wl: WorkloadArrays,
 
     cost = jnp.asarray(TECH_COST_ALPHA)[tech_i] * A
     return CostMetrics(energy=E, latency=L, area=A, feasible=feasible,
-                       cost=cost)
+                       cost=cost, feasible_w=feasible_w)
 
 
 def make_evaluator(space: SearchSpace, wl: WorkloadArrays,

@@ -1,18 +1,24 @@
 """Distributed population evaluation (DESIGN.md §3).
 
 The paper parallelizes design evaluation over 64 CPU cores with a
-process pool; the TPU-native equivalent shards the population axis of
-the jit'd cost model across the device mesh with shard_map. Each device
-evaluates P/n_devices designs; scores are returned sharded and the
-(tiny) argmin happens on host or via a final psum-min.
+process pool; the TPU-native equivalent shards the jit'd cost model
+across the device mesh. Two granularities:
 
-Used by launch/search.py and exercised (lower + compile) by the
-production-mesh dry-run as the "paper's technique" cell.
+  * ``make_sharded_scorer`` — shard the *population* axis of one
+    evaluation call (the host-driven search paths and the dry-run's
+    "paper's technique" cell);
+  * ``compile_batched_search`` — shard the *search* axis: the
+    device-resident search kernel (core.genetic.search_kernel) is
+    vmapped over independent searches (seeds, workload-specific
+    baselines) and each device runs whole searches locally, which is
+    communication-free end to end.
+
+Used by launch/search.py, experiments/runner.py, and exercised
+(lower + compile) by the production-mesh dry-run.
 """
 from __future__ import annotations
 
-import functools
-from typing import Callable
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
@@ -53,3 +59,23 @@ def make_sharded_scorer(space: SearchSpace, wl: WorkloadArrays,
     score_fn.lowerable = fn  # expose for dry-run .lower().compile()
     score_fn.in_sharding = pop_sharding
     return score_fn
+
+
+def compile_batched_search(search_one: Callable, mesh: Optional[Mesh] = None,
+                           axis: str = "data") -> Callable:
+    """jit(vmap(search_one)): S independent searches as one computation.
+
+    ``search_one`` is a traceable kernel ``key -> pytree of arrays``
+    (core.genetic.search_kernel closed over its schedule/scorer); the
+    returned callable maps a (S, key) batch to the stacked results.
+    With a ``mesh``, the search axis is sharded over ``axis``: every
+    device runs S/axis_size whole searches with zero inter-device
+    communication (searches are independent by construction). The axis
+    size must then divide S; callers fall back to mesh=None otherwise
+    (see experiments/runner._search_mesh).
+    """
+    fn = jax.vmap(search_one)
+    if mesh is None:
+        return jax.jit(fn)
+    sh = NamedSharding(mesh, P(axis))
+    return jax.jit(fn, in_shardings=sh, out_shardings=sh)

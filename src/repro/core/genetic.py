@@ -5,11 +5,18 @@ Operators: simulated binary crossover (SBX) + polynomial mutation
 (index -> (idx + 0.5)/cardinality in (0,1), decode by floor), exactly
 the pymoo-style treatment the paper uses. Phase schedule = Table 4.
 
-The per-generation step (selection, crossover, mutation) is pure JAX and
-jit-compiled; the evaluation callback is the jitted cost model, so a
-whole generation is two device computations regardless of population
-size — this is the TPU-native replacement for the paper's 64-core
-process pool (DESIGN.md §3).
+The search engine is **device-resident**: the whole multi-phase run —
+every generation of every phase — is folded into a single
+``jax.lax.scan`` over a static-length schedule of (pc, eta_c, pm,
+eta_m) rows, so one search is ONE compiled computation with zero host
+transfers between generations (``ga_scan``/``search_kernel``). The
+kernel is traceable, which makes independent searches a ``vmap`` axis:
+``batched_joint_search`` runs S seeds (or, in the experiment runner, S
+seeds x W workload-specific baselines) in one device call — the
+TPU-native replacement for the paper's 64-core process pool
+(DESIGN.md §3). ``run_ga_loop`` keeps the original host-driven loop as
+the reference implementation; tests/test_genetic.py pins scan-vs-loop
+equivalence.
 """
 from __future__ import annotations
 
@@ -48,6 +55,16 @@ PLAIN_PHASE = Phase("plain", 0.9, 15.0, 0.1, 20.0)
 N_ELITE = 2
 
 
+def phase_schedule(phases: Sequence[Phase],
+                   generations_per_phase: int) -> np.ndarray:
+    """Static-length scanned schedule: one (pc, eta_c, pm, eta_m) row
+    per generation, phases expanded in order — the array the GA scan
+    consumes instead of a host-side phase loop."""
+    rows = [[p.pc, p.eta_c, p.pm, p.eta_m]
+            for p in phases for _ in range(generations_per_phase)]
+    return np.asarray(rows, np.float32)
+
+
 def _to_real(pop: jax.Array, cards: jax.Array) -> jax.Array:
     return (pop.astype(jnp.float32) + 0.5) / cards[None, :]
 
@@ -57,8 +74,8 @@ def _to_index(x: jax.Array, cards: jax.Array) -> jax.Array:
     return idx.astype(jnp.int32)
 
 
-def _sbx(key: jax.Array, x1: jax.Array, x2: jax.Array, pc: float,
-         eta: float) -> Tuple[jax.Array, jax.Array]:
+def _sbx(key: jax.Array, x1: jax.Array, x2: jax.Array, pc: jax.Array,
+         eta: jax.Array) -> Tuple[jax.Array, jax.Array]:
     k_u, k_cross, k_gene = jax.random.split(key, 3)
     u = jax.random.uniform(k_u, x1.shape)
     beta = jnp.where(
@@ -74,7 +91,8 @@ def _sbx(key: jax.Array, x1: jax.Array, x2: jax.Array, pc: float,
     return jnp.where(m, c1, x1), jnp.where(m, c2, x2)
 
 
-def _poly_mutate(key: jax.Array, x: jax.Array, pm: float, eta: float,
+def _poly_mutate(key: jax.Array, x: jax.Array, pm: jax.Array,
+                 eta: jax.Array,
                  cards: jax.Array | None = None) -> jax.Array:
     """Polynomial mutation; with ``cards``, a selected gene moves at
     least one discrete index step. High eta otherwise yields deltas far
@@ -96,11 +114,13 @@ def _poly_mutate(key: jax.Array, x: jax.Array, pm: float, eta: float,
     return jnp.clip(x + jnp.where(mask, delta, 0.0), 0.0, 1.0 - 1e-6)
 
 
-@functools.partial(jax.jit, static_argnames=("pc", "eta_c", "pm", "eta_m"))
 def _generation_step(key: jax.Array, pop: jax.Array, scores: jax.Array,
-                     cards: jax.Array, pc: float, eta_c: float, pm: float,
-                     eta_m: float) -> jax.Array:
-    """One GA generation: sort, tournament-select, SBX, mutate, elitism."""
+                     cards: jax.Array, pc: jax.Array, eta_c: jax.Array,
+                     pm: jax.Array, eta_m: jax.Array) -> jax.Array:
+    """One GA generation: sort, tournament-select, SBX, mutate, elitism.
+
+    The phase parameters are traced (not static), so all phases share
+    one compilation and the whole schedule can ride a lax.scan."""
     P = pop.shape[0]
     order = jnp.argsort(scores)
     pop_sorted = pop[order]
@@ -121,6 +141,93 @@ def _generation_step(key: jax.Array, pop: jax.Array, scores: jax.Array,
     return new_pop
 
 
+_generation_step_jit = jax.jit(_generation_step)
+
+
+def ga_scan(key: jax.Array, init_pop: jax.Array, cards: jax.Array,
+            schedule: jax.Array, score_fn: Callable[[jax.Array], jax.Array],
+            ) -> Tuple[jax.Array, ...]:
+    """Traceable multi-phase GA: the whole schedule in one lax.scan.
+
+    ``score_fn`` must be traceable (pure JAX). Returns device arrays
+    (best_genome, best_score, history (T+1,), pop_sorted, scores_sorted)
+    — no host transfer happens here; callers materialize once at the
+    end of the full search computation.
+    """
+    def body(carry, params):
+        key, pop, best_g, best_s = carry
+        scores = score_fn(pop)
+        i = jnp.argmin(scores)
+        s = scores[i]
+        better = s < best_s
+        best_s = jnp.where(better, s, best_s)
+        best_g = jnp.where(better, pop[i], best_g)
+        key, k = jax.random.split(key)
+        pop = _generation_step(k, pop, scores, cards,
+                               params[0], params[1], params[2], params[3])
+        return (key, pop, best_g, best_s), best_s
+
+    best0 = jnp.array(jnp.inf, jnp.float32)
+    carry = (key, init_pop, init_pop[0], best0)
+    (key, pop, best_g, best_s), hist = jax.lax.scan(body, carry, schedule)
+    scores = score_fn(pop)
+    order = jnp.argsort(scores)
+    pop, scores = pop[order], scores[order]
+    better = scores[0] < best_s
+    best_s = jnp.where(better, scores[0], best_s)
+    best_g = jnp.where(better, pop[0], best_g)
+    hist = jnp.concatenate([hist, best_s[None]])
+    return best_g, best_s, hist, pop, scores
+
+
+def search_kernel(key: jax.Array, cards: jax.Array, schedule: jax.Array,
+                  score_fn: Callable[[jax.Array], jax.Array],
+                  feasible_fn: Optional[Callable] = None, *,
+                  p_h: int, p_e: int, p_ga: int,
+                  hamming_sampling: bool = True,
+                  oversample: int = 4) -> Tuple[jax.Array, ...]:
+    """Traceable Algorithm 1: device-resident sampling + scanned GA.
+
+    Capacity filtering happens *inside* the compiled region via the
+    traceable ``feasible_fn`` (sampling.sample_initial_device masks
+    infeasible candidates out of the Hamming selection). vmap over
+    ``key`` (and any axis score_fn closes over) to batch independent
+    searches into one device call.
+    """
+    key, k_s = jax.random.split(key)
+    if hamming_sampling:
+        c2 = sampling.sample_initial_device(k_s, cards, p_h, p_e,
+                                            feasible_fn=feasible_fn,
+                                            oversample=oversample)
+        scores = score_fn(c2)
+        init = c2[jnp.argsort(scores)[:p_ga]]
+    elif feasible_fn is None:
+        init = sampling.uniform_genomes(k_s, cards, p_ga)
+    else:
+        pool = sampling.sample_initial_device(k_s, cards, p_h, p_ga,
+                                              feasible_fn=feasible_fn,
+                                              oversample=oversample)
+        init = pool[:p_ga]
+    return ga_scan(key, init, cards, schedule, score_fn)
+
+
+# Compiled search kernels cached per (closure identity, static knobs):
+# re-running the same search setup (e.g. the sequential specific-
+# baseline fallback looping seeds) must not re-trace the whole scanned
+# GA. Values pin the closures so id() keys stay valid; growth is
+# bounded by the number of distinct scorer closures, same order as the
+# per-scenario jitted evaluators.
+_KERNEL_CACHE: dict = {}
+
+
+def _cached_jit(key, builder, *refs):
+    entry = _KERNEL_CACHE.get(key)
+    if entry is None:
+        entry = (builder(), refs)
+        _KERNEL_CACHE[key] = entry
+    return entry[0]
+
+
 class SearchResult(NamedTuple):
     best_genome: np.ndarray
     best_score: float
@@ -131,17 +238,57 @@ class SearchResult(NamedTuple):
     sampling_time_s: float
 
 
-def run_ga(key: jax.Array, space: SearchSpace,
-           score_fn: Callable[[jax.Array], jax.Array],
-           init_pop: jax.Array, phases: Sequence[Phase],
-           generations_per_phase: int) -> SearchResult:
-    """Run the (multi-phase) GA from an initial population."""
+class MultiSearchResult(NamedTuple):
+    """S independent searches executed as one batched device call.
+
+    Every array carries a leading seed axis; ``seed_result(i)`` slices
+    one seed out as a plain SearchResult, ``best()`` the winner.
+    """
+    best_genomes: np.ndarray     # (S, n_params)
+    best_scores: np.ndarray      # (S,)
+    histories: np.ndarray        # (S, T+1)
+    populations: np.ndarray      # (S, P, n_params), sorted per seed
+    scores: np.ndarray           # (S, P), sorted per seed
+    wall_time_s: float
+    sampling_time_s: float
+
+    @property
+    def n_seeds(self) -> int:
+        return int(self.best_scores.shape[0])
+
+    def seed_result(self, i: int) -> SearchResult:
+        return SearchResult(
+            best_genome=self.best_genomes[i],
+            best_score=float(self.best_scores[i]),
+            history=self.histories[i],
+            population=self.populations[i], scores=self.scores[i],
+            wall_time_s=self.wall_time_s,
+            sampling_time_s=self.sampling_time_s)
+
+    def best(self) -> SearchResult:
+        return self.seed_result(int(np.argmin(self.best_scores)))
+
+
+def run_ga_loop(key: jax.Array, space: SearchSpace,
+                score_fn: Callable[[jax.Array], jax.Array],
+                init_pop: jax.Array, phases: Sequence[Phase],
+                generations_per_phase: int) -> SearchResult:
+    """Reference host-driven GA loop (pre-scan implementation).
+
+    One Python round-trip per generation: argmin + float sync + key
+    split on host. Kept as the equivalence oracle for ``ga_scan`` and
+    as the measured baseline in benchmarks/bench_experiments.py.
+    """
     t0 = time.perf_counter()
     cards = jnp.asarray(space.cardinalities.astype(np.float32))
     pop = init_pop
     best_g, best_s = None, np.inf
     hist: List[float] = []
     for phase in phases:
+        pc = jnp.float32(phase.pc)
+        eta_c = jnp.float32(phase.eta_c)
+        pm = jnp.float32(phase.pm)
+        eta_m = jnp.float32(phase.eta_m)
         for _ in range(generations_per_phase):
             scores = score_fn(pop)
             i = int(jnp.argmin(scores))
@@ -150,10 +297,10 @@ def run_ga(key: jax.Array, space: SearchSpace,
                 best_s, best_g = s, np.asarray(pop[i])
             hist.append(best_s)
             key, k = jax.random.split(key)
-            pop = _generation_step(k, pop, scores, cards, phase.pc,
-                                   phase.eta_c, phase.pm, phase.eta_m)
+            pop = _generation_step_jit(k, pop, scores, cards, pc, eta_c,
+                                       pm, eta_m)
     scores = np.asarray(score_fn(pop))
-    order = np.argsort(scores)
+    order = np.argsort(scores, kind="stable")
     i = order[0]
     if scores[i] < best_s:
         best_s, best_g = float(scores[i]), np.asarray(pop)[i]
@@ -166,25 +313,118 @@ def run_ga(key: jax.Array, space: SearchSpace,
                         sampling_time_s=0.0)
 
 
+def run_ga(key: jax.Array, space: SearchSpace,
+           score_fn: Callable[[jax.Array], jax.Array],
+           init_pop: jax.Array, phases: Sequence[Phase],
+           generations_per_phase: int,
+           use_scan: bool = True) -> SearchResult:
+    """Run the (multi-phase) GA from an initial population.
+
+    Default: one jit-compiled lax.scan over the whole phase schedule
+    (zero host syncs between generations). ``use_scan=False`` runs the
+    reference host-driven loop.
+    """
+    if not use_scan:
+        return run_ga_loop(key, space, score_fn, init_pop, phases,
+                           generations_per_phase)
+    t0 = time.perf_counter()
+    cards = jnp.asarray(space.cardinalities.astype(np.float32))
+    schedule = jnp.asarray(phase_schedule(phases, generations_per_phase))
+    fn = _cached_jit(
+        ("ga_scan", id(score_fn)),
+        lambda: jax.jit(functools.partial(ga_scan, score_fn=score_fn)),
+        score_fn)
+    best_g, best_s, hist, pop, scores = fn(key, init_pop, cards, schedule)
+    return SearchResult(best_genome=np.asarray(best_g),
+                        best_score=float(best_s),
+                        history=np.asarray(hist),
+                        population=np.asarray(pop),
+                        scores=np.asarray(scores),
+                        wall_time_s=time.perf_counter() - t0,
+                        sampling_time_s=0.0)
+
+
+def batched_joint_search(keys: jax.Array, space: SearchSpace,
+                         score_fn: Callable[[jax.Array], jax.Array],
+                         p_h: int = 1000, p_e: int = 500, p_ga: int = 40,
+                         generations_per_phase: int = 10,
+                         phases: Sequence[Phase] = FOUR_PHASES,
+                         feasible_fn: Optional[Callable] = None,
+                         hamming_sampling: bool = True,
+                         oversample: int = 4,
+                         mesh=None) -> MultiSearchResult:
+    """Algorithm 1, S seeds in one compiled device computation.
+
+    ``keys``: (S, key) PRNG keys, one independent search each; the
+    whole batch — sampling, capacity masking, scoring, every GA
+    generation — is one jit(vmap(search_kernel)) call. ``score_fn`` and
+    ``feasible_fn`` must be traceable (pure JAX; the jitted evaluator
+    closures qualify). With ``mesh``, the seed axis is sharded over the
+    mesh's 'data' axis (core.distributed.compile_batched_search).
+    """
+    t0 = time.perf_counter()
+    cards = jnp.asarray(space.cardinalities.astype(np.float32))
+    schedule = jnp.asarray(phase_schedule(phases, generations_per_phase))
+
+    def one(key):
+        return search_kernel(key, cards, schedule, score_fn, feasible_fn,
+                             p_h=p_h, p_e=p_e, p_ga=p_ga,
+                             hamming_sampling=hamming_sampling,
+                             oversample=oversample)
+
+    from .distributed import compile_batched_search
+    fn = _cached_jit(
+        ("batched", id(space), id(score_fn), id(feasible_fn), id(mesh),
+         p_h, p_e, p_ga, generations_per_phase, tuple(phases),
+         hamming_sampling, oversample),
+        lambda: compile_batched_search(one, mesh=mesh),
+        space, score_fn, feasible_fn, mesh)
+    best_g, best_s, hist, pops, scores = fn(keys)
+    return MultiSearchResult(
+        best_genomes=np.asarray(best_g), best_scores=np.asarray(best_s),
+        histories=np.asarray(hist), populations=np.asarray(pops),
+        scores=np.asarray(scores),
+        wall_time_s=time.perf_counter() - t0, sampling_time_s=0.0)
+
+
 def joint_search(key: jax.Array, space: SearchSpace,
                  score_fn: Callable[[jax.Array], jax.Array],
                  p_h: int = 1000, p_e: int = 500, p_ga: int = 40,
                  generations_per_phase: int = 10,
                  phases: Sequence[Phase] = FOUR_PHASES,
                  capacity_filter=None,
-                 hamming_sampling: bool = True) -> SearchResult:
+                 hamming_sampling: bool = True,
+                 feasible_fn: Optional[Callable] = None,
+                 use_scan: bool = True) -> SearchResult:
     """Algorithm 1: optimized sampling + four-phase GA.
+
+    Three execution modes:
+      * device-resident (default when the capacity constraint is absent
+        or given as a *traceable* ``feasible_fn``): sampling, capacity
+        masking and the whole GA run as ONE compiled computation;
+      * host-sampled (a host-side ``capacity_filter`` is given):
+        sampling keeps the paper's host rejection loop, the GA still
+        runs as one scan;
+      * reference (``use_scan=False``): the original host-driven loop.
 
     hamming_sampling=False gives the 'non-modified GA with enhanced
     sampling' ablation its counterfactual (random init of size p_ga).
     """
+    if use_scan and capacity_filter is None:
+        res = batched_joint_search(
+            key[None], space, score_fn, p_h=p_h, p_e=p_e, p_ga=p_ga,
+            generations_per_phase=generations_per_phase, phases=phases,
+            feasible_fn=feasible_fn,
+            hamming_sampling=hamming_sampling).seed_result(0)
+        return res
     t0 = time.perf_counter()
     key, k_s = jax.random.split(key)
     if hamming_sampling:
         c2 = sampling.sample_initial(k_s, space, p_h, p_e,
                                      capacity_filter=capacity_filter)
         scores = np.asarray(score_fn(c2))
-        init = jnp.asarray(np.asarray(c2)[np.argsort(scores)[:p_ga]])
+        order = np.argsort(scores, kind="stable")
+        init = jnp.asarray(np.asarray(c2)[order[:p_ga]])
     else:
         if capacity_filter is None:
             init = sampling.random_genomes(k_s, space, p_ga)
@@ -193,7 +433,8 @@ def joint_search(key: jax.Array, space: SearchSpace,
                                            capacity_filter=capacity_filter)
             init = pool[:p_ga]
     t_sample = time.perf_counter() - t0
-    res = run_ga(key, space, score_fn, init, phases, generations_per_phase)
+    res = run_ga(key, space, score_fn, init, phases, generations_per_phase,
+                 use_scan=use_scan)
     return res._replace(sampling_time_s=t_sample,
                         wall_time_s=res.wall_time_s + t_sample)
 
@@ -242,7 +483,9 @@ def random_search(key: jax.Array, space: SearchSpace,
 def plain_ga_search(key: jax.Array, space: SearchSpace,
                     score_fn: Callable[[jax.Array], jax.Array],
                     p_ga: int = 40, total_generations: int = 40,
-                    capacity_filter=None) -> SearchResult:
+                    capacity_filter=None,
+                    feasible_fn: Optional[Callable] = None,
+                    use_scan: bool = True) -> SearchResult:
     """Traditional non-modified GA [44]: random init, single phase.
 
     Runs total_generations (= 4 phases * G for an equal budget)."""
@@ -251,4 +494,5 @@ def plain_ga_search(key: jax.Array, space: SearchSpace,
                         generations_per_phase=total_generations,
                         phases=(PLAIN_PHASE,),
                         capacity_filter=capacity_filter,
-                        hamming_sampling=False)
+                        feasible_fn=feasible_fn,
+                        hamming_sampling=False, use_scan=use_scan)

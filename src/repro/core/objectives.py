@@ -14,14 +14,19 @@ mJ·ms·mm² scale).
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Optional
+from typing import Optional
 
 import jax.numpy as jnp
 
 from .cost_model import CostMetrics
 
 AREA_CONSTRAINT_MM2 = 800.0
-_BIG = 1.0e30
+# Penalty score for infeasible / over-area designs. Public: the
+# workload-restricted scorers in experiments/runner.py apply the same
+# penalty so a full-set evaluation is interchangeable with a
+# single-workload pack.
+INFEASIBLE_PENALTY = 1.0e30
+_BIG = INFEASIBLE_PENALTY
 
 
 def _agg(x, scheme: str):

@@ -1,7 +1,7 @@
 """Technology-cost trade-off analysis (paper §IV-I, Fig. 9, Table 7)."""
 from __future__ import annotations
 
-from typing import List, Sequence, Tuple
+from typing import Tuple
 
 import numpy as np
 

@@ -11,10 +11,20 @@ Three steps, exactly as the paper:
 The greedy max-min selection runs on-device with lax.fori_loop:
 maintain d_min(X, C2) for every candidate and add argmax(d_min) each
 iteration — O(P_E · P_H · n_params).
+
+Two entry points:
+  * ``sample_initial``        — host-orchestrated (the paper's rejection
+                                loop for the capacity filter);
+  * ``sample_initial_device`` — fully traceable (scan/vmap-safe): a
+                                statically oversampled pool is
+                                capacity-masked *inside* the compiled
+                                region, so the device-resident search
+                                kernel (genetic.search_kernel) never
+                                leaves the device for sampling.
 """
 from __future__ import annotations
 
-from typing import Optional
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
@@ -23,17 +33,30 @@ import numpy as np
 from .search_space import SearchSpace
 
 
+def uniform_genomes(key: jax.Array, cards: jax.Array, n: int) -> jax.Array:
+    """Traceable uniform genomes from a cardinality array:
+    (n, n_params) int32 of value indices."""
+    u = jax.random.uniform(key, (n, cards.shape[0]))
+    return jnp.floor(u * cards[None, :].astype(jnp.float32)).astype(
+        jnp.int32)
+
+
 def random_genomes(key: jax.Array, space: SearchSpace, n: int) -> jax.Array:
     """Uniform random genomes: (n, n_params) int32 of value indices."""
-    cards = jnp.asarray(space.cardinalities)
-    u = jax.random.uniform(key, (n, space.n_params))
-    return jnp.floor(u * cards[None, :]).astype(jnp.int32)
+    return uniform_genomes(key, jnp.asarray(space.cardinalities), n)
 
 
-def hamming_select(candidates: jax.Array, n_select: int) -> jax.Array:
+def hamming_select(candidates: jax.Array, n_select: int,
+                   n_valid: Optional[jax.Array] = None) -> jax.Array:
     """Greedy max-min Hamming-distance subset selection.
 
     candidates: (P_H, n) int32. Returns (n_select, n) int32.
+
+    ``n_valid`` (traced scalar) restricts selection to the candidate
+    *prefix* [0, n_valid): entries past it are treated as already taken
+    and only reappear (as duplicates of the seed) once every valid
+    candidate is exhausted — the capacity-masked device path orders
+    feasible candidates first and passes the feasible count here.
     """
     P_H = candidates.shape[0]
     n_select = min(n_select, P_H)
@@ -45,6 +68,8 @@ def hamming_select(candidates: jax.Array, n_select: int) -> jax.Array:
     d_min = dist_to(0)
     # first candidate seeds the set (paper: C2 = {c_1-1})
     taken = jnp.zeros((P_H,), bool).at[0].set(True)
+    if n_valid is not None:
+        taken = taken | (jnp.arange(P_H) >= n_valid)
 
     def body(i, state):
         selected, d_min, taken = state
@@ -60,13 +85,39 @@ def hamming_select(candidates: jax.Array, n_select: int) -> jax.Array:
     return candidates[selected]
 
 
+def sample_initial_device(key: jax.Array, cards: jax.Array, p_h: int,
+                          p_e: int,
+                          feasible_fn: Optional[Callable] = None,
+                          oversample: int = 4) -> jax.Array:
+    """Traceable ``sample_initial``: capacity masking inside the
+    compiled region (scan/vmap-safe — static shapes, no host syncs).
+
+    Without a filter this is bit-identical to the host path: P_H
+    uniform genomes -> greedy Hamming selection. With ``feasible_fn``
+    (traceable (N, n) -> (N,) bool), a statically oversampled pool is
+    sorted feasible-first (stable, preserving draw order) and the
+    selection is confined to the feasible prefix; if fewer than P_E
+    candidates are feasible the set is padded with duplicates of the
+    seed rather than with infeasible designs.
+    """
+    if feasible_fn is None:
+        return hamming_select(uniform_genomes(key, cards, p_h), p_e)
+    pool = uniform_genomes(key, cards, p_h * oversample)
+    ok = feasible_fn(pool)
+    order = jnp.argsort(~ok)          # stable: feasible first, draw order
+    cands = pool[order[:p_h]]
+    n_valid = jnp.minimum(jnp.sum(ok), p_h)
+    return hamming_select(cands, p_e, n_valid=n_valid)
+
+
 def sample_initial(key: jax.Array, space: SearchSpace, p_h: int, p_e: int,
                    capacity_filter=None, max_tries: int = 20) -> jax.Array:
     """P_H random (feasibility-filtered) -> P_E Hamming-diverse genomes.
 
     capacity_filter: optional fn(genomes (N, n)) -> (N,) bool keeping
     designs that can hold the largest workload (RRAM weight-stationary
-    case in Algorithm 1).
+    case in Algorithm 1). Host-orchestrated rejection loop; the
+    device-resident search path uses ``sample_initial_device`` instead.
     """
     if capacity_filter is None:
         cands = random_genomes(key, space, p_h)

@@ -18,7 +18,7 @@ check in the cost model does the same via ceil(8 / bits_cell).
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 

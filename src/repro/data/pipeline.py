@@ -12,7 +12,7 @@ log V). Labels = next token (the loss shifts internally).
 """
 from __future__ import annotations
 
-from typing import Dict, Optional, Tuple
+from typing import Dict, Optional
 
 import jax
 import numpy as np

@@ -8,8 +8,9 @@ layer that reproduce the paper's EDAP tables end-to-end.
 from .scenarios import (Budget, DEFAULT_BUDGET, REGISTRY, SMOKE_BUDGET,
                         Scenario, get_scenario, paper_table_scenarios,
                         scenario_names)
-from .runner import (DEFAULT_OUT_DIR, make_scorer, run_scenario,
-                     run_search)
-from .report import (baseline_reductions, compute_gap, load_results,
-                     render_markdown, render_summary, write_artifacts,
-                     write_summary)
+from .runner import (DEFAULT_OUT_DIR, make_scorer, make_traced_scorer,
+                     run_scenario, run_search, run_search_batched,
+                     run_specific_fanout, run_specific_sequential)
+from .report import (aggregate_seeds, baseline_reductions, compute_gap,
+                     load_results, render_markdown, render_summary,
+                     write_artifacts, write_summary)

@@ -3,7 +3,7 @@
   python -m repro.experiments list [--verbose]
   python -m repro.experiments show --scenario rram_small_set
   python -m repro.experiments run --scenario rram_small_set \
-      [--out DIR] [--seed N] [--force]
+      [--out DIR] [--seed N] [--seeds S] [--force]
   python -m repro.experiments run --all [--out DIR]
   python -m repro.experiments report [--out DIR]
 
@@ -56,14 +56,20 @@ def cmd_run(args) -> int:
     for name in names:
         sc = get_scenario(name)
         res = runner.run_scenario(sc, out_dir=args.out, force=args.force,
-                                  seed=args.seed)
+                                  seed=args.seed, n_seeds=args.seeds)
         tag = "cached" if res.get("cached") else \
             f"{res['wall_time_s']:.1f}s"
         gap = res.get("gap", {}).get("mean_pct")
         gap_s = f", mean gap {gap:.1f}%" if gap is not None else ""
+        seeds = res.get("seeds")
+        seed_s = ""
+        if seeds and seeds.get("count", 1) > 1:
+            bs = seeds["best_score"]
+            seed_s = (f" [{seeds['count']} seeds: "
+                      f"{bs['mean']:.4g} ± {bs['std']:.3g}]")
         print(f"[{tag}] {name}: best {res['objective']} score "
               f"{res['best_score']:.4g}, area "
-              f"{res['generalized']['area_mm2']:.1f} mm²{gap_s}")
+              f"{res['generalized']['area_mm2']:.1f} mm²{gap_s}{seed_s}")
         print(f"  -> {args.out}/{name}/result.json (+ report.md)")
     return 0
 
@@ -104,6 +110,9 @@ def main(argv=None) -> int:
     p.add_argument("--out", default=runner.DEFAULT_OUT_DIR)
     p.add_argument("--seed", type=int, default=None,
                    help="override the scenario's seed")
+    p.add_argument("--seeds", type=int, default=None,
+                   help="run N independent seeds as one batched device "
+                        "computation and report mean±std EDAP/gap")
     p.add_argument("--force", action="store_true",
                    help="ignore cached results")
     p.set_defaults(fn=cmd_run)

@@ -14,12 +14,21 @@ Computes the paper's headline metrics from runner results:
 ``write_artifacts`` emits ``result.json`` + ``report.md`` per scenario;
 ``render_summary`` tabulates every cached result into one cross-scenario
 markdown table (``summary.md``) that regenerates the paper-table rows.
+
+Multi-seed runs (``Budget.n_seeds`` > 1) add a ``seeds`` block —
+mean±std of the best EDAP score and of the generalization gap across
+the batched seeds (``aggregate_seeds``) — rendered as a seed-robustness
+section in the markdown report.
+
+All JSON artifacts are written with ``sort_keys=True`` and workloads
+are iterated in sorted order, so cached results diff cleanly in CI
+artifact comparisons.
 """
 from __future__ import annotations
 
 import json
 import os
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
@@ -44,6 +53,37 @@ def compute_gap(result: Dict) -> Dict:
         "mean_pct": float(np.mean(vals)) if vals else float("nan"),
         "max_pct": float(np.max(vals)) if vals else float("nan"),
     }
+
+
+def aggregate_seeds(seed_list: Sequence[int], best_scores: np.ndarray,
+                    gap_mean_pcts: Optional[np.ndarray] = None) -> Dict:
+    """Cross-seed statistics block for the result dict.
+
+    best_scores: (S,) best objective (EDAP) score per seed;
+    gap_mean_pcts: optional (S,) per-seed mean generalization gap.
+    std is population std (ddof=0), 0.0 for a single seed.
+    """
+    scores = np.asarray(best_scores, float)
+    out: Dict = {
+        "count": len(seed_list),
+        "list": [int(s) for s in seed_list],
+        "best_seed": int(seed_list[int(np.argmin(scores))]),
+        "best_score": {
+            "per_seed": [float(s) for s in scores],
+            "mean": float(np.mean(scores)),
+            "std": float(np.std(scores)),
+        },
+    }
+    if gap_mean_pcts is not None:
+        gaps = np.asarray(gap_mean_pcts, float)
+        finite = gaps[np.isfinite(gaps)]
+        out["gap_mean_pct"] = {
+            "per_seed": [float(g) for g in gaps],
+            "mean": float(np.mean(finite)) if finite.size else
+            float("nan"),
+            "std": float(np.std(finite)) if finite.size else float("nan"),
+        }
+    return out
 
 
 def _fmt(x: float, nd: int = 3) -> str:
@@ -82,7 +122,8 @@ def render_markdown(result: Dict) -> str:
         hdr += " specific EDAP | gap (%) |"
         sep += "---|---|"
     lines += [hdr, sep]
-    for w, m in g["per_workload"].items():
+    for w in sorted(g["per_workload"]):
+        m = g["per_workload"][w]
         row = (f"| {w} | {_fmt(m['energy_mJ'])} | {_fmt(m['latency_ms'])} "
                f"| {_fmt(m['edap'])} |")
         if gap:
@@ -97,14 +138,36 @@ def render_markdown(result: Dict) -> str:
             f"mean {_fmt(gap['mean_pct'])}%, max {_fmt(gap['max_pct'])}% "
             f"(0% = generalized design matches each specialized one).",
         ]
+    seeds = result.get("seeds")
+    if seeds and seeds.get("count", 1) > 1:
+        bs = seeds["best_score"]
+        lines += [
+            "",
+            f"## Seed robustness (n={seeds['count']})",
+            "",
+            f"- best EDAP score: **{_fmt(bs['mean'], 4)} ± "
+            f"{_fmt(bs['std'], 3)}** over seeds "
+            f"{seeds['list']} (best: seed {seeds['best_seed']})",
+        ]
+        gs = seeds.get("gap_mean_pct")
+        if gs:
+            lines.append(
+                f"- mean generalization gap: **{_fmt(gs['mean'])}% ± "
+                f"{_fmt(gs['std'])}%**")
+        lines.append(
+            "- all seeds executed as one batched (vmapped) device "
+            "computation")
     return "\n".join(lines) + "\n"
 
 
 def write_artifacts(result: Dict, out_dir: str) -> None:
-    """Write result.json + report.md for one scenario."""
+    """Write result.json + report.md for one scenario.
+
+    JSON keys are sorted so re-runs and CI artifact comparisons diff
+    cleanly (insertion order never leaks into the artifact)."""
     os.makedirs(out_dir, exist_ok=True)
     with open(os.path.join(out_dir, "result.json"), "w") as f:
-        json.dump(result, f, indent=1, default=float)
+        json.dump(result, f, indent=1, sort_keys=True, default=float)
     with open(os.path.join(out_dir, "report.md"), "w") as f:
         f.write(render_markdown(result))
 

@@ -1,21 +1,32 @@
 """Scenario runner: registry entry -> search -> metrics -> artifacts.
 
-The hot path is the batched population evaluation: one jitted cost-model
-call scores a whole (P, n_params) population against every workload at
-once, so a GA generation stays two device computations (score + step)
-regardless of population or workload-set size. On a multi-device
-runtime the population axis is sharded over the mesh 'data' axis
-(core/distributed.make_sharded_scorer); populations that do not divide
-the device count are padded with repeats and the scores sliced back.
+The hot path is **device-resident** (core/genetic.py): a scenario's
+whole search — Hamming sampling, capacity masking, every GA generation
+of every phase — is one jit-compiled ``lax.scan`` computation, and
+independent searches are a ``vmap`` axis on top of it. That batched
+axis serves two fan-outs:
+
+  * multi-seed: ``Budget.n_seeds`` (or ``run_scenario(n_seeds=...)``)
+    runs S independent seeds of the generalized search in ONE device
+    call and reports mean±std EDAP/gap (report.py);
+  * specific baselines: the per-workload specific searches the paper's
+    gap claims normalize against run as one (S x W)-batched call
+    instead of a sequential Python loop — each search scores genomes
+    through the *full* workload-set evaluator restricted to its own
+    workload column, which is arithmetically identical to packing that
+    workload alone (see make_traced_scorer).
+
+On a multi-device runtime the search axis is sharded over the mesh
+'data' axis (core.distributed.compile_batched_search) when the batch
+divides the device count; the per-call population sharding path
+(make_sharded_scorer) remains for host-driven callers.
 
 Results cache per scenario under ``<out_dir>/<scenario>/``:
-  result.json          — full metrics (report.py schema)
+  result.json          — full metrics (report.py schema), sorted keys
   report.md            — human-readable table
-  specific_<wl>.json   — per-workload specific-search sub-results,
-                         written as they finish so an interrupted run
-                         resumes without redoing completed searches.
+  specific_<wl>.json   — per-workload specific-search sub-results
 Re-running a completed scenario returns the cached result unless
-``force=True``.
+``force=True`` (seed and n_seeds are part of the cache key).
 """
 from __future__ import annotations
 
@@ -23,26 +34,35 @@ import dataclasses
 import json
 import os
 import time
-from typing import Callable, Dict, List, Optional, Tuple
+from typing import Callable, Dict, List, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..core import (SearchResult, SearchSpace, WorkloadArrays,
-                    joint_search, make_evaluator, make_objective, pack,
-                    plain_ga_search, random_search)
-from ..core.distributed import make_sharded_scorer
-from ..core.objectives import Objective, per_workload_scores
+from ..core import (FOUR_PHASES, MultiSearchResult, PLAIN_PHASE,
+                    SearchResult, SearchSpace, WorkloadArrays,
+                    batched_joint_search, joint_search, make_evaluator,
+                    make_objective, pack, phase_schedule, plain_ga_search,
+                    random_search, search_kernel)
+from ..core.cost_model import HWConstants, evaluate_population
+from ..core.distributed import compile_batched_search, make_sharded_scorer
+from ..core.objectives import (INFEASIBLE_PENALTY, Objective,
+                               per_workload_scores)
 from . import report
-from .scenarios import Budget, Scenario
+from .scenarios import Scenario
 
 DEFAULT_OUT_DIR = os.path.join("experiments", "results")
+
+# objective kinds whose per-workload restriction is expressible through
+# per_workload_scores — the precondition for the specific-baseline
+# fan-out (edap_cost/edap_acc fall back to the sequential path)
+_FANOUT_KINDS = ("edap", "edp", "energy", "delay", "area")
 
 
 def make_scorer(space: SearchSpace, wa: WorkloadArrays,
                 objective: Objective) -> Tuple[Callable, Callable]:
-    """(score_fn, evaluator) for a scenario.
+    """(score_fn, evaluator) for host-driven callers.
 
     score_fn: (P, n) genomes -> (P,) scores, sharded over the mesh
     'data' axis when more than one device is visible. evaluator is the
@@ -70,10 +90,68 @@ def make_scorer(space: SearchSpace, wa: WorkloadArrays,
     return score_fn, evaluator
 
 
+class TracedScorer(NamedTuple):
+    """Traceable (pure-JAX) closures consumed inside the compiled
+    search region — no jit wrappers, no host round-trips.
+
+    score/feasible see the whole workload set; score_w/feasible_w
+    restrict to one workload column ``w`` (a traced index), matching a
+    single-workload pack bit-for-bit: per-workload energy/latency/
+    capacity are computed independently per workload in the cost model,
+    and the same infeasibility/area penalty is applied.
+    """
+    score: Callable                 # (P, n) -> (P,)
+    feasible: Callable              # (P, n) -> (P,) bool
+    score_w: Optional[Callable]     # ((P, n), w) -> (P,)
+    feasible_w: Callable            # ((P, n), w) -> (P,) bool
+    metrics: Callable               # (P, n) -> CostMetrics
+
+
+def make_traced_scorer(space: SearchSpace, wa: WorkloadArrays,
+                       objective: Objective,
+                       constants: HWConstants = HWConstants(),
+                       ) -> TracedScorer:
+    table = jnp.asarray(space.value_table())
+
+    def metrics(genomes):
+        return evaluate_population(space, wa, genomes, constants, table)
+
+    def score(genomes):
+        return objective(metrics(genomes))
+
+    def feasible(genomes):
+        return metrics(genomes).feasible
+
+    def feasible_w(genomes, w):
+        return metrics(genomes).feasible_w[:, w]
+
+    score_w = None
+    if objective.kind in _FANOUT_KINDS:
+        def score_w(genomes, w):
+            m = metrics(genomes)
+            s = per_workload_scores(m, objective.kind)[:, w]
+            bad = (~m.feasible_w[:, w]) | (m.area >
+                                           objective.area_constraint)
+            return jnp.where(bad, INFEASIBLE_PENALTY, s)
+
+    return TracedScorer(score=score, feasible=feasible, score_w=score_w,
+                        feasible_w=feasible_w, metrics=metrics)
+
+
+def _search_mesh(n_searches: int):
+    """Mesh for sharding a batch of independent searches, or None when
+    a single device is visible / the batch does not divide the axis."""
+    n_dev = jax.device_count()
+    if n_dev <= 1 or n_searches % n_dev:
+        return None
+    return jax.make_mesh((n_dev,), ("data",))
+
+
 def run_search(scenario: Scenario, space: SearchSpace,
                score_fn: Callable, capacity_filter,
                seed: int) -> SearchResult:
-    """Dispatch one search with the scenario's algorithm and budget."""
+    """Dispatch one host-driven search (back-compat; the scenario
+    runner itself uses the batched path below)."""
     b = scenario.budget
     key = jax.random.PRNGKey(seed)
     if scenario.algorithm == "fourphase":
@@ -90,6 +168,146 @@ def run_search(scenario: Scenario, space: SearchSpace,
                              n_evals=b.n_evaluations,
                              capacity_filter=capacity_filter)
     raise ValueError(f"unknown algorithm {scenario.algorithm!r}")
+
+
+def run_search_batched(scenario: Scenario, space: SearchSpace,
+                       traced: TracedScorer, seeds: List[int],
+                       host_score_fn: Callable,
+                       evaluator: Callable) -> MultiSearchResult:
+    """All seeds of the scenario's generalized search in one device
+    call (GA algorithms); random search loops seeds on host (it is a
+    four-dispatch baseline, not the hot path)."""
+    b = scenario.budget
+    feas = traced.feasible if scenario.mem == "rram" else None
+    keys = jnp.stack([jax.random.PRNGKey(s) for s in seeds])
+    mesh = _search_mesh(len(seeds))
+    if scenario.algorithm == "fourphase":
+        return batched_joint_search(
+            keys, space, traced.score, p_h=b.p_h, p_e=b.p_e, p_ga=b.p_ga,
+            generations_per_phase=b.generations, feasible_fn=feas,
+            mesh=mesh)
+    if scenario.algorithm == "plain":
+        return batched_joint_search(
+            keys, space, traced.score, p_h=max(4 * b.p_ga, 200),
+            p_e=b.p_ga, p_ga=b.p_ga,
+            generations_per_phase=b.total_generations,
+            phases=(PLAIN_PHASE,), hamming_sampling=False,
+            feasible_fn=feas, mesh=mesh)
+    if scenario.algorithm == "random":
+        cap = None
+        if scenario.mem == "rram":
+            def cap(g):
+                return np.asarray(evaluator(jnp.asarray(g)).feasible)
+        rs = [random_search(jax.random.PRNGKey(s), space, host_score_fn,
+                            n_evals=b.n_evaluations, capacity_filter=cap)
+              for s in seeds]
+        return MultiSearchResult(
+            best_genomes=np.stack([r.best_genome for r in rs]),
+            best_scores=np.asarray([r.best_score for r in rs]),
+            histories=np.stack([r.history for r in rs]),
+            populations=np.stack([r.population for r in rs]),
+            scores=np.stack([r.scores for r in rs]),
+            wall_time_s=sum(r.wall_time_s for r in rs),
+            sampling_time_s=0.0)
+    raise ValueError(f"unknown algorithm {scenario.algorithm!r}")
+
+
+def _specific_budget(scenario: Scenario):
+    """(schedule, p_h, p_e, hamming) of one specific-baseline search —
+    the same algorithm/budget as the generalized search."""
+    b = scenario.budget
+    if scenario.algorithm == "plain":
+        sched = phase_schedule((PLAIN_PHASE,), b.total_generations)
+        return sched, max(4 * b.p_ga, 200), b.p_ga, False
+    sched = phase_schedule(FOUR_PHASES, b.generations)
+    return sched, b.p_h, b.p_e, True
+
+
+def run_specific_fanout(scenario: Scenario, space: SearchSpace,
+                        traced: TracedScorer, seeds: List[int],
+                        n_workloads: int) -> Dict[str, np.ndarray]:
+    """The (S seeds x W workloads) specific-baseline searches as ONE
+    batched device call — replaces the sequential per-workload loop.
+
+    Returns arrays keyed 'genomes' (S, W, n), 'best_scores' (S, W) and
+    'edap' (S, W): the specific design's EDAP on its own workload.
+    Seeds per search match the sequential path: seed + 1000 + i.
+    """
+    S, W = len(seeds), n_workloads
+    sched, p_h, p_e, hamming = _specific_budget(scenario)
+    schedule = jnp.asarray(sched)
+    cards = jnp.asarray(space.cardinalities.astype(np.float32))
+    rram = scenario.mem == "rram"
+    b = scenario.budget
+
+    keys = jnp.stack([jax.random.PRNGKey(s + 1000 + i)
+                      for s in seeds for i in range(W)])
+    ws = jnp.asarray([i for _ in seeds for i in range(W)], jnp.int32)
+
+    def one(key, w):
+        def sc(g):
+            return traced.score_w(g, w)
+        fe = None
+        if rram:
+            def fe(g):
+                return traced.feasible_w(g, w)
+        return search_kernel(key, cards, schedule, sc, fe, p_h=p_h,
+                             p_e=p_e, p_ga=b.p_ga,
+                             hamming_sampling=hamming)
+
+    fn = compile_batched_search(one, mesh=_search_mesh(S * W))
+    best_g, best_s, _, _, _ = fn(keys, ws)
+    genomes = np.asarray(best_g).reshape(S, W, -1)
+    best_scores = np.asarray(best_s).reshape(S, W)
+    # each specific design evaluated on its own workload (EDAP is the
+    # gap metric regardless of the search objective kind)
+    m = traced.metrics(jnp.asarray(genomes.reshape(S * W, -1)))
+    edap_all = np.asarray(per_workload_scores(m, "edap")).reshape(S, W, W)
+    edap = edap_all[:, np.arange(W), np.arange(W)]
+    return {"genomes": genomes, "best_scores": best_scores, "edap": edap}
+
+
+def _single_workload(scenario: Scenario, wl_name: str) -> Scenario:
+    """The workload-specific counterpart of a multi-workload scenario."""
+    return dataclasses.replace(
+        scenario, name=f"{scenario.name}/specific_{wl_name}",
+        workloads=(wl_name,), specific_baselines=False)
+
+
+def run_specific_sequential(scenario: Scenario, space: SearchSpace,
+                            objective: Objective, workloads,
+                            seeds: List[int]) -> Dict[str, np.ndarray]:
+    """Sequential reference for the specific baselines: one search per
+    (seed, workload), each with its own single-workload pack. Used when
+    the objective kind cannot be column-restricted (edap_cost/edap_acc)
+    or the algorithm is random; also the equivalence oracle for
+    run_specific_fanout (tests/test_experiments.py) where the init
+    paths coincide — i.e. without a capacity filter (SRAM). For RRAM
+    the two paths draw their initial pools differently (device-masked
+    oversampling vs the host rejection loop), so per-seed trajectories
+    legitimately differ; the fan-out is the canonical path there."""
+    S, W = len(seeds), len(workloads)
+    genomes, best_scores, edap = None, np.zeros((S, W)), np.zeros((S, W))
+    for i, w in enumerate(workloads):
+        sub_sc = _single_workload(scenario, w.name)
+        sub_wa = pack([w])
+        sub_score, sub_ev = make_scorer(space, sub_wa, objective)
+        sub_cap = None
+        if scenario.mem == "rram":
+            def sub_cap(g, _ev=sub_ev):
+                return np.asarray(_ev(jnp.asarray(g)).feasible)
+        for si, s in enumerate(seeds):
+            r = run_search(sub_sc, space, sub_score, sub_cap,
+                           seed=s + 1000 + i)
+            if genomes is None:
+                genomes = np.zeros((S, W, r.best_genome.shape[0]),
+                                   r.best_genome.dtype)
+            genomes[si, i] = r.best_genome
+            best_scores[si, i] = r.best_score
+            msub = sub_ev(jnp.asarray(r.best_genome[None]))
+            edap[si, i] = float(
+                np.asarray(per_workload_scores(msub, "edap"))[0, 0])
+    return {"genomes": genomes, "best_scores": best_scores, "edap": edap}
 
 
 def _design_metrics(space: SearchSpace, evaluator: Callable,
@@ -111,30 +329,31 @@ def _design_metrics(space: SearchSpace, evaluator: Callable,
     }
 
 
-def _single_workload(scenario: Scenario, wl_name: str) -> Scenario:
-    """The workload-specific counterpart of a multi-workload scenario."""
-    return dataclasses.replace(
-        scenario, name=f"{scenario.name}/specific_{wl_name}",
-        workloads=(wl_name,), specific_baselines=False)
-
-
 def run_scenario(scenario: Scenario,
                  out_dir: str = DEFAULT_OUT_DIR,
                  force: bool = False,
                  seed: Optional[int] = None,
-                 write: bool = True) -> Dict:
+                 write: bool = True,
+                 n_seeds: Optional[int] = None,
+                 specific_fanout: bool = True) -> Dict:
     """Execute one scenario end-to-end; returns the result dict.
 
+    ``n_seeds`` (default: the scenario budget's ``n_seeds``) runs seeds
+    ``seed, seed+1, ...`` as one batched device computation; top-level
+    fields report the best seed, the ``seeds`` block carries mean±std.
     Idempotent: a completed scenario loads from cache unless ``force``.
     ``write=False`` skips all filesystem I/O (tests, library use).
     """
     seed = scenario.seed if seed is None else seed
+    n_seeds = scenario.budget.n_seeds if n_seeds is None else n_seeds
+    seeds = [seed + j for j in range(n_seeds)]
     sdir = os.path.join(out_dir, scenario.name)
     cache = os.path.join(sdir, "result.json")
     if write and not force and os.path.exists(cache):
         with open(cache) as f:
             cached = json.load(f)
-        if cached.get("seed") == seed:
+        if (cached.get("seed") == seed
+                and cached.get("n_seeds", 1) == n_seeds):
             cached["cached"] = True
             return cached
 
@@ -143,13 +362,22 @@ def run_scenario(scenario: Scenario,
     workloads = scenario.resolve_workloads()
     wa = pack(workloads)
     objective = make_objective(scenario.objective)
-    score_fn, evaluator = make_scorer(space, wa, objective)
-    cap = None
-    if scenario.mem == "rram":
-        def cap(g):
-            return np.asarray(evaluator(jnp.asarray(g)).feasible)
+    host_score_fn, evaluator = make_scorer(space, wa, objective)
+    traced = make_traced_scorer(space, wa, objective)
 
-    res = run_search(scenario, space, score_fn, cap, seed)
+    res = run_search_batched(scenario, space, traced, seeds,
+                             host_score_fn, evaluator)
+    if float(np.min(res.best_scores)) >= INFEASIBLE_PENALTY:
+        # the device-resident sampler cannot raise mid-computation the
+        # way the host rejection loop did — surface the same condition
+        # here instead of silently writing an infeasible design
+        raise RuntimeError(
+            f"scenario {scenario.name!r}: every seed converged to an "
+            "infeasible design — the capacity/area constraints reject "
+            "(almost) the whole space; raise the sampling oversample "
+            "or shrink the workloads")
+    j_best = int(np.argmin(res.best_scores))
+    best = res.seed_result(j_best)
     result: Dict = {
         "scenario": scenario.name,
         "mem": scenario.mem,
@@ -158,11 +386,12 @@ def run_scenario(scenario: Scenario,
         "paper_ref": scenario.paper_ref,
         "description": scenario.description,
         "seed": seed,
+        "n_seeds": n_seeds,
         "workloads": list(wa.names),
-        "best_score": float(res.best_score),
-        "generalized": _design_metrics(space, evaluator, res.best_genome,
+        "best_score": float(best.best_score),
+        "generalized": _design_metrics(space, evaluator, best.best_genome,
                                        objective, wa.names),
-        "history": np.asarray(res.history).tolist(),
+        "history": np.asarray(best.history).tolist(),
         "search_wall_time_s": res.wall_time_s,
         "sampling_time_s": res.sampling_time_s,
         "cached": False,
@@ -170,46 +399,62 @@ def run_scenario(scenario: Scenario,
 
     # Workload-specific baselines: the same algorithm/budget aimed at
     # each workload alone — the normalization the paper's gap claims
-    # (and Fig. 5) are built on.
+    # (and Fig. 5) are built on. All (seed x workload) searches run as
+    # one batched device call when the objective supports it.
+    gap_means = None
     if scenario.specific_baselines and len(workloads) > 1:
-        if write:
-            os.makedirs(sdir, exist_ok=True)
-        specific: Dict[str, Dict] = {}
-        for i, w in enumerate(workloads):
-            spath = os.path.join(sdir, f"specific_{w.name}.json")
-            sub = None
-            if write and not force and os.path.exists(spath):
-                with open(spath) as f:
-                    loaded = json.load(f)
-                # a stale sub-result from another seed would silently
-                # mix seeds into the gap computation — re-run instead
-                if loaded.get("seed") == seed:
-                    sub = loaded
-            if sub is None:
-                sub_sc = _single_workload(scenario, w.name)
-                sub_wa = pack([w])
-                sub_score, sub_ev = make_scorer(space, sub_wa, objective)
-                sub_cap = None
-                if scenario.mem == "rram":
-                    def sub_cap(g, _ev=sub_ev):
-                        return np.asarray(_ev(jnp.asarray(g)).feasible)
-                r = run_search(sub_sc, space, sub_score, sub_cap,
-                               seed=seed + 1000 + i)
-                sub = _design_metrics(space, sub_ev, r.best_genome,
-                                      objective, sub_wa.names)
-                sub["best_score"] = float(r.best_score)
-                sub["seed"] = seed
-                if write:
-                    with open(spath, "w") as f:
-                        json.dump(sub, f, indent=1)
-            specific[w.name] = sub
+        use_fanout = (specific_fanout and traced.score_w is not None
+                      and scenario.algorithm != "random")
+        if use_fanout:
+            spec = run_specific_fanout(scenario, space, traced, seeds,
+                                       len(workloads))
+        else:
+            spec = run_specific_sequential(scenario, space, objective,
+                                           workloads, seeds)
+
+        # per-seed generalized EDAPs -> per-seed gap (one device call)
+        m_gen = traced.metrics(jnp.asarray(res.best_genomes))
+        gen_edap = np.asarray(per_workload_scores(m_gen, "edap"))
+        with np.errstate(divide="ignore", invalid="ignore"):
+            gap_pct = 100.0 * (gen_edap / spec["edap"] - 1.0)
+        gap_means = np.mean(gap_pct, axis=1)
+
+        names = [w.name for w in workloads]
         result["specific"] = {
-            n: {"design": s["design"],
-                "edap": s["per_workload"][n]["edap"]}
-            for n, s in specific.items()
+            n: {"design": space.decode(spec["genomes"][j_best, i]),
+                "edap": float(spec["edap"][j_best, i])}
+            for i, n in enumerate(names)
         }
         result["gap"] = report.compute_gap(result)
 
+        if write:
+            os.makedirs(sdir, exist_ok=True)
+            m_spec = traced.metrics(jnp.asarray(
+                spec["genomes"][j_best]))
+            for i, n in enumerate(names):
+                sub = {
+                    "design": space.decode(spec["genomes"][j_best, i]),
+                    "objective_score": float(
+                        spec["best_scores"][j_best, i]),
+                    "area_mm2": float(np.asarray(m_spec.area)[i]),
+                    "feasible": bool(
+                        np.asarray(m_spec.feasible_w)[i, i]),
+                    "per_workload": {
+                        n: {"energy_mJ":
+                            float(np.asarray(m_spec.energy)[i, i]) * 1e3,
+                            "latency_ms":
+                            float(np.asarray(m_spec.latency)[i, i]) * 1e3,
+                            "edap": float(spec["edap"][j_best, i])}},
+                    "best_score": float(spec["best_scores"][j_best, i]),
+                    "seed": seed,
+                }
+                with open(os.path.join(sdir, f"specific_{n}.json"),
+                          "w") as f:
+                    json.dump(sub, f, indent=1, sort_keys=True,
+                              default=float)
+
+    result["seeds"] = report.aggregate_seeds(
+        seeds, np.asarray(res.best_scores), gap_means)
     result["wall_time_s"] = time.perf_counter() - t0
     if write:
         report.write_artifacts(result, sdir)

@@ -40,11 +40,16 @@ class Budget:
     p_h/p_e/p_ga: Hamming-sampling pool / diverse subset / GA population.
     generations: per phase (4-phase GA runs 4x this; plain GA and random
     search get the equal total budget — see runner.py).
+    n_seeds: independent search repetitions, executed as ONE batched
+    device computation (vmap over the seed axis); results report
+    mean±std EDAP/gap — the paper's robustness claim a single seed
+    cannot support. Override per run with ``--seeds`` on the CLI.
     """
     p_h: int = 300
     p_e: int = 120
     p_ga: int = 24
     generations: int = 4
+    n_seeds: int = 1
 
     @property
     def total_generations(self) -> int:

@@ -56,8 +56,8 @@ def flash_mha(q: jax.Array, k: jax.Array, v: jax.Array,
     qf = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
     kf = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
     vf = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
-    fold = lambda x: x.transpose(0, 2, 1, 3).reshape(
-        B * H, x.shape[1], hd)
+    def fold(x):
+        return x.transpose(0, 2, 1, 3).reshape(B * H, x.shape[1], hd)
     out = flash_attention(fold(qf), fold(kf), fold(vf), causal=causal,
                           window=window, block_q=bq, block_k=bk,
                           interpret=_on_cpu())

@@ -35,7 +35,7 @@ from ..models.transformer import (decode_step, forward, init_cache,
                                   init_params, prefill)
 from ..parallel.sharding import (batch_partition_spec, cache_specs,
                                  shardings_from_specs, zero1_specs)
-from ..train.loop import init_train_state, make_train_step
+from ..train.loop import make_train_step
 from ..train.optimizer import adamw_init
 from .mesh import make_production_mesh, mesh_context
 

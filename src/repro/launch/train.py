@@ -14,8 +14,6 @@ from __future__ import annotations
 import argparse
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
 from ..configs import get_config
 from ..data import SyntheticTokenPipeline

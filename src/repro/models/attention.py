@@ -11,8 +11,6 @@ KV cache (single query).
 """
 from __future__ import annotations
 
-import functools
-from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp

@@ -11,7 +11,7 @@ Conventions (DESIGN.md §5):
 """
 from __future__ import annotations
 
-from typing import Any, Optional, Sequence, Tuple
+from typing import Any, Optional, Tuple
 
 import jax
 import numpy as np

@@ -19,7 +19,8 @@ class AdamWState(NamedTuple):
 
 
 def adamw_init(params: Any) -> AdamWState:
-    z = lambda p: jnp.zeros(p.shape, jnp.float32)
+    def z(p):
+        return jnp.zeros(p.shape, jnp.float32)
     return AdamWState(m=jax.tree.map(z, params), v=jax.tree.map(z, params),
                       count=jnp.zeros((), jnp.int32))
 

@@ -7,7 +7,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import (Objective, PAPER_4, get_workload_set,
+from repro.core import (PAPER_4, get_workload_set,
                         make_evaluator, pack, reduced_rram_space)
 from repro.core.baselines import (cmaes_search, es_search, g3pcx_search,
                                   pso_search)

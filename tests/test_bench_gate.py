@@ -1,0 +1,71 @@
+"""The CI perf gate (benchmarks/check_regression.py): regression
+direction handling, gating, and the committed baseline's shape."""
+import json
+import os
+
+from benchmarks.check_regression import check, regression_of
+
+REPO_ROOT = os.path.join(os.path.dirname(__file__), os.pardir)
+
+
+def _m(value, higher=False, gated=False):
+    return {"value": value, "higher_is_better": higher, "gated": gated}
+
+
+def test_regression_direction():
+    # lower-is-better: going up is a regression
+    assert regression_of(_m(1.0), _m(1.5)) == 0.5
+    assert regression_of(_m(1.0), _m(0.5)) == -0.5
+    # higher-is-better: going down is a regression
+    assert regression_of(_m(10.0, higher=True), _m(5.0, higher=True)) \
+        == 0.5
+    assert regression_of(_m(10.0, higher=True), _m(20.0, higher=True)) \
+        == -1.0
+
+
+def test_check_gates_only_gated_metrics():
+    baseline = {"metrics": {
+        "speedup": _m(10.0, higher=True, gated=True),
+        "wall_s": _m(1.0),
+    }}
+    # ungated metric regresses badly, gated one is fine -> pass
+    ok, lines = check({"metrics": {"speedup": _m(9.0, higher=True),
+                                   "wall_s": _m(100.0)}}, baseline)
+    assert ok
+    assert any("warn" in line for line in lines)
+    # gated metric regresses past the threshold -> fail
+    ok, _ = check({"metrics": {"speedup": _m(5.0, higher=True),
+                               "wall_s": _m(1.0)}}, baseline)
+    assert not ok
+    # strict gates everything
+    ok, _ = check({"metrics": {"speedup": _m(10.0, higher=True),
+                               "wall_s": _m(100.0)}}, baseline,
+                  strict=True)
+    assert not ok
+    # missing gated metric -> fail
+    ok, _ = check({"metrics": {"wall_s": _m(1.0)}}, baseline)
+    assert not ok
+
+
+def test_check_threshold():
+    baseline = {"metrics": {"t": _m(1.0, gated=True)}}
+    ok, _ = check({"metrics": {"t": _m(1.25)}}, baseline, threshold=0.30)
+    assert ok
+    ok, _ = check({"metrics": {"t": _m(1.35)}}, baseline, threshold=0.30)
+    assert not ok
+
+
+def test_committed_baseline_gates_search_speedup():
+    """The committed baseline must gate the scan-vs-host-loop speedup
+    (the tentpole metric) and stay in sync with the bench's names."""
+    with open(os.path.join(REPO_ROOT, "benchmarks",
+                           "baseline.json")) as f:
+        baseline = json.load(f)
+    m = baseline["metrics"]
+    assert m["search_scan_speedup_x"]["gated"]
+    assert m["search_scan_speedup_x"]["higher_is_better"]
+    # the acceptance floor is 3x; the pinned baseline must imply more
+    # even after the 30% threshold
+    assert m["search_scan_speedup_x"]["value"] * 0.7 >= 3.0
+    for name in ("search_loop_scan_s", "search_loop_host_s"):
+        assert name in m

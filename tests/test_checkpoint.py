@@ -3,7 +3,6 @@ import os
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from conftest import tiny_config
 from repro.checkpoint import latest_step, list_steps, restore, save

@@ -2,7 +2,6 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from conftest import tiny_config
 from repro.parallel.compression import (compress_int8, decompress_int8,
                                         error_feedback_compress,
                                         init_residuals)

@@ -1,7 +1,6 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.core import (PAPER_4, get_space, get_workload_set,
                         make_evaluator, pack, random_genomes)

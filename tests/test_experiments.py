@@ -9,10 +9,12 @@ import numpy as np
 import pytest
 
 from repro.core import make_objective, random_search, get_space
-from repro.experiments import (Budget, REGISTRY, Scenario, compute_gap,
+from repro.experiments import (Budget, Scenario, compute_gap,
                                baseline_reductions, get_scenario,
-                               render_markdown, render_summary,
-                               run_scenario, scenario_names)
+                               make_traced_scorer, render_markdown,
+                               render_summary, run_scenario,
+                               run_specific_fanout,
+                               run_specific_sequential, scenario_names)
 
 REPO_ROOT = os.path.join(os.path.dirname(__file__), os.pardir)
 
@@ -114,12 +116,76 @@ def test_runner_algorithms_dispatch(tmp_path):
         assert "gap" not in res
 
 
+def test_multiseed_aggregation():
+    """Budget.n_seeds / run_scenario(n_seeds=...): seeds run as one
+    batched device call; the seeds block carries consistent mean/std
+    and the top-level result is the best seed."""
+    res = run_scenario(TINY, write=False, n_seeds=3)
+    sb = res["seeds"]
+    assert res["n_seeds"] == 3
+    assert sb["count"] == 3 and sb["list"] == [0, 1, 2]
+    per = sb["best_score"]["per_seed"]
+    assert len(per) == 3
+    assert sb["best_score"]["mean"] == pytest.approx(np.mean(per))
+    assert sb["best_score"]["std"] == pytest.approx(np.std(per))
+    assert res["best_score"] == min(per)
+    # best_seed is the seed *value* at the argmin position
+    assert sb["best_seed"] == sb["list"][int(np.argmin(per))]
+    # gap statistics present (TINY has specific baselines)
+    gp = sb["gap_mean_pct"]["per_seed"]
+    assert len(gp) == 3 and np.isfinite(sb["gap_mean_pct"]["mean"])
+    # seed 0 of the batch reproduces the single-seed run
+    r1 = run_scenario(TINY, write=False)
+    assert per[0] == pytest.approx(r1["best_score"], rel=1e-5)
+    # n_seeds defaulting through the budget
+    multi = dataclasses.replace(
+        TINY, budget=dataclasses.replace(TINY.budget, n_seeds=2))
+    r2 = run_scenario(multi, write=False)
+    assert r2["seeds"]["count"] == 2
+
+
+def test_specific_fanout_matches_sequential():
+    """The (seed x workload) specific-baseline fan-out (one batched
+    device call) reproduces the sequential per-workload loop's EDAPs.
+
+    SRAM on purpose: without a capacity filter both paths draw the
+    identical initial pool, so the equivalence is exact; with one
+    (RRAM) the init draws legitimately differ (device-masked
+    oversampling vs host rejection loop — see run_specific_sequential).
+    """
+    space = TINY.space()
+    wls = TINY.resolve_workloads()
+    from repro.core import make_objective, pack
+    obj = make_objective(TINY.objective)
+    traced = make_traced_scorer(space, pack(wls), obj)
+    seeds = [0, 1]
+    fan = run_specific_fanout(TINY, space, traced, seeds, len(wls))
+    seq = run_specific_sequential(TINY, space, obj, wls, seeds)
+    assert fan["edap"].shape == (2, len(wls))
+    np.testing.assert_allclose(fan["edap"], seq["edap"], rtol=1e-4)
+    np.testing.assert_allclose(fan["best_scores"], seq["best_scores"],
+                               rtol=1e-4)
+
+
+def test_artifacts_deterministic_json(tmp_path):
+    """All JSON artifacts are written with sorted keys so CI artifact
+    comparisons diff cleanly."""
+    out = str(tmp_path)
+    run_scenario(TINY, out_dir=out)
+    sdir = os.path.join(out, "tiny_test")
+    for name in ("result.json", "specific_alexnet.json"):
+        text = open(os.path.join(sdir, name)).read()
+        loaded = json.loads(text)
+        assert text == json.dumps(loaded, indent=1, sort_keys=True)
+
+
 def test_random_search_deterministic():
     space = get_space("sram")
     obj = make_objective("edap:mean")
     from repro.core import make_evaluator, pack, get_workload_set
     ev = make_evaluator(space, pack(get_workload_set(("alexnet",))))
-    sf = lambda g: obj(ev(g))
+    def sf(g):
+        return obj(ev(g))
     r1 = random_search(jax.random.PRNGKey(3), space, sf, n_evals=50)
     r2 = random_search(jax.random.PRNGKey(3), space, sf, n_evals=50)
     assert r1.best_score == r2.best_score

@@ -4,11 +4,13 @@ benchmarks/)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
-from repro.core import (FOUR_PHASES, Objective, PAPER_4, get_space,
-                        get_workload_set, joint_search, make_evaluator,
-                        pack, plain_ga_search)  # noqa: F401
+from repro.core import (FOUR_PHASES, Objective, PAPER_4,
+                        batched_joint_search, get_space, get_workload_set,
+                        joint_search, make_evaluator, pack,
+                        phase_schedule, plain_ga_search, random_genomes,
+                        run_ga, run_ga_loop)
+from repro.core.cost_model import evaluate_population
 from repro.core.objectives import per_workload_scores
 
 
@@ -68,7 +70,8 @@ def test_joint_beats_largest_workload_optimization():
     deviation discussion on the largest workload itself)."""
     sp, wa, ev, _, cap = _setup()
     obj = Objective("edap", "mean")
-    score_fn = lambda g: obj(ev(g))
+    def score_fn(g):
+        return obj(ev(g))
     joint = joint_search(jax.random.PRNGKey(0), sp, score_fn, p_h=300,
                          p_e=100, p_ga=20, generations_per_phase=4,
                          capacity_filter=cap)
@@ -94,3 +97,75 @@ def test_result_population_sorted():
                        p_e=64, p_ga=16, generations_per_phase=2)
     assert np.all(np.diff(res.scores) >= 0)
     assert res.scores[0] == res.best_score
+
+
+# ---------------------------------------------------------------------------
+# device-resident engine: scan/loop equivalence, multi-seed batching
+# ---------------------------------------------------------------------------
+
+def test_phase_schedule_shape():
+    s = phase_schedule(FOUR_PHASES, 3)
+    assert s.shape == (12, 4)
+    # rows repeat each phase's (pc, eta_c, pm, eta_m) G times in order
+    assert np.allclose(s[0], [1.0, 3.0, 1.0, 3.0])
+    assert np.allclose(s[-1], [1.0, 25.0, 0.05, 25.0])
+
+
+def test_scan_matches_host_loop():
+    """The tentpole equivalence guarantee: the scan-compiled GA and the
+    reference host-driven loop follow the same trajectory from the same
+    PRNG key and initial population."""
+    sp, wa, ev, score_fn, cap = _setup("sram")
+    init = random_genomes(jax.random.PRNGKey(7), sp, 16)
+    key = jax.random.PRNGKey(11)
+    r_loop = run_ga_loop(key, sp, score_fn, init, FOUR_PHASES, 3)
+    r_scan = run_ga(key, sp, score_fn, init, FOUR_PHASES, 3)
+    assert len(r_scan.history) == len(r_loop.history)
+    np.testing.assert_allclose(r_scan.history, r_loop.history, rtol=1e-4)
+    np.testing.assert_allclose(r_scan.best_score, r_loop.best_score,
+                               rtol=1e-4)
+
+
+def test_joint_search_scan_matches_host_path():
+    """Full Algorithm 1: one-compilation device path vs the legacy
+    host-orchestrated path, same key -> same best score."""
+    sp, wa, ev, score_fn, cap = _setup("sram")
+    kw = dict(p_h=96, p_e=48, p_ga=12, generations_per_phase=2)
+    r_dev = joint_search(jax.random.PRNGKey(5), sp, score_fn, **kw)
+    r_host = joint_search(jax.random.PRNGKey(5), sp, score_fn,
+                          use_scan=False, **kw)
+    np.testing.assert_allclose(r_dev.best_score, r_host.best_score,
+                               rtol=1e-4)
+
+
+def test_batched_multiseed_matches_single():
+    """vmapped multi-seed search: each seed's result equals the same
+    seed run alone (independence of the batch axis)."""
+    sp, wa, ev, score_fn, cap = _setup("sram")
+    kw = dict(p_h=64, p_e=32, p_ga=8, generations_per_phase=2)
+    keys = jnp.stack([jax.random.PRNGKey(s) for s in (0, 1, 2)])
+    mr = batched_joint_search(keys, sp, score_fn, **kw)
+    assert mr.n_seeds == 3
+    assert mr.best_scores.shape == (3,)
+    for i in (0, 2):
+        single = joint_search(keys[i], sp, score_fn, **kw)
+        np.testing.assert_allclose(mr.best_scores[i], single.best_score,
+                                   rtol=1e-4)
+    assert mr.best().best_score == float(np.min(mr.best_scores))
+
+
+def test_device_capacity_masking_feasible():
+    """RRAM with the traceable feasibility mask: the whole search stays
+    on device and still lands on a feasible design."""
+    sp, wa, ev, score_fn, cap = _setup()
+    table = jnp.asarray(sp.value_table())
+
+    def feasible_fn(g):
+        return evaluate_population(sp, wa, g, table=table).feasible
+
+    res = joint_search(jax.random.PRNGKey(0), sp, score_fn, p_h=128,
+                       p_e=48, p_ga=12, generations_per_phase=2,
+                       feasible_fn=feasible_fn)
+    assert res.best_score < 1e29
+    m = ev(jnp.asarray(res.best_genome[None]))
+    assert bool(m.feasible[0])

@@ -62,7 +62,8 @@ def test_flash_attention_matches_ref(B, S, T, H, hd, causal, win, dt):
     v = jax.random.normal(jax.random.PRNGKey(2), (B, T, H, hd)).astype(dt)
     o = flash_mha(q, k, v, causal=causal, window=win,
                   block_q=16, block_k=16)
-    fold = lambda x: x.transpose(0, 2, 1, 3).reshape(B * H, x.shape[1], hd)
+    def fold(x):
+        return x.transpose(0, 2, 1, 3).reshape(B * H, x.shape[1], hd)
     ref = attention_ref(fold(q), fold(k), fold(v), causal=causal,
                         window=win)
     ref = ref.reshape(B, H, S, hd).transpose(0, 2, 1, 3)

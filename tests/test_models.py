@@ -6,7 +6,6 @@ import pytest
 from conftest import tiny_config
 from repro.models import (blockwise_attention, decode_step, forward,
                           init_params, loss_fn, prefill)
-from repro.models.attention import decode_attention
 from repro.kernels.ref import attention_ref
 
 
@@ -20,7 +19,8 @@ def test_blockwise_attention_matches_ref(key):
                                   chunk_q=16, chunk_k=16)
         kk = jnp.repeat(k, 2, axis=2)
         vv = jnp.repeat(v, 2, axis=2)
-        fold = lambda x: x.transpose(0, 2, 1, 3).reshape(B * H, S, hd)
+        def fold(x):
+            return x.transpose(0, 2, 1, 3).reshape(B * H, S, hd)
         ref = attention_ref(fold(q), fold(kk), fold(vv), causal=causal,
                             window=win)
         ref = ref.reshape(B, H, S, hd).transpose(0, 2, 1, 3)
@@ -116,7 +116,6 @@ def test_grad_accumulation_matches_full_batch(key):
 def test_int8_kv_cache_decode_close_to_exact(key):
     """§Perf iteration 4: int8 KV cache decode matches teacher forcing
     within quantization tolerance (halves decode HBM traffic)."""
-    import dataclasses
     for extra in ({}, {"window": 8}, {"qk_norm": True}):
         cfg = tiny_config(kv_quant=True, **extra)
         params, _ = init_params(key, cfg)

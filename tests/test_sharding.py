@@ -10,7 +10,6 @@ from repro.models import init_params
 from repro.models.transformer import init_cache
 from repro.parallel.sharding import (batch_partition_spec, cache_specs,
                                      shardings_from_specs, zero1_specs)
-from repro.train.optimizer import adamw_init
 
 
 def test_specs_divisible_for_all_full_archs():

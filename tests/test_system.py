@@ -3,8 +3,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from conftest import tiny_config
-from repro.configs import ARCH_IDS, get_config
+from repro.configs import get_config
 from repro.core import (Objective, PAPER_4, from_arch_config, get_space,
                         get_workload_set, joint_search, make_evaluator,
                         pack, random_genomes)
@@ -17,7 +16,8 @@ def test_full_paper_pipeline_improves_over_random():
     wa = pack(get_workload_set(PAPER_4))
     ev = make_evaluator(sp, wa)
     obj = Objective("edap", "max")
-    score_fn = lambda g: obj(ev(g))
+    def score_fn(g, _obj=obj, _ev=ev):
+        return _obj(_ev(g))
     res = joint_search(jax.random.PRNGKey(0), sp, score_fn, p_h=256,
                        p_e=96, p_ga=24, generations_per_phase=4)
     rand = random_genomes(jax.random.PRNGKey(42), sp,
@@ -36,7 +36,8 @@ def test_search_over_assigned_architectures():
     wa = pack(wls)
     ev = make_evaluator(sp, wa)
     obj = Objective("edap", "mean")
-    score_fn = lambda g: obj(ev(g))
+    def score_fn(g, _obj=obj, _ev=ev):
+        return _obj(_ev(g))
     res = joint_search(jax.random.PRNGKey(1), sp, score_fn, p_h=128,
                        p_e=48, p_ga=16, generations_per_phase=3)
     assert np.isfinite(res.best_score) and res.best_score < 1e29
