@@ -15,6 +15,11 @@ Cells:
                              perf gate pins (benchmarks/baseline.json).
   experiments_multiseed    — S independent seeds as ONE vmapped device
                              call vs S sequential scan searches.
+  experiments_accuracy_scored — §IV-H hot path: the batched
+                             non-ideality accuracy model vs the
+                             retained host per-genome loop at
+                             population scale (gated speedup), plus
+                             the scan-compiled edap_acc smoke search.
   experiments_smoke_run    — wall time of a full tiny scenario
                              (search + specific-baseline fan-out +
                              report), write=False so only compute is
@@ -171,6 +176,70 @@ def experiments_multiseed(n_seeds: int = 4, iters: int = 4) -> None:
             higher_is_better=True, gated=False)
 
 
+def experiments_accuracy_scored(pop: int = 64, host_pop: int = 8,
+                                iters: int = 5) -> None:
+    """Accuracy-scored search hot path (§IV-H): the batched (vmapped,
+    jit-compiled) non-ideality accuracy model vs the retained host
+    per-genome loop (accuracy_proxy_host) at population scale, plus
+    the steady-state scan-compiled edap_acc smoke search.
+
+    The gated metric is the dimensionless device-vs-host-loop speedup
+    of one population evaluation — the factor that let edap_acc move
+    inside the compiled search. Host time is measured on a small
+    genome subset and scaled linearly (the loop is embarrassingly
+    per-genome)."""
+    from repro.core import nonideal
+
+    sc = get_scenario("rram_accuracy")
+    space = sc.space()
+    wls = sc.resolve_workloads()
+    model = jax.jit(nonideal.make_accuracy_model(space, wls))
+    g = random_genomes(jax.random.PRNGKey(0), space, pop)
+    model(g).block_until_ready()  # compile
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = model(g)
+    out.block_until_ready()
+    t_dev = (time.perf_counter() - t0) / iters
+    gh = np.asarray(g[:host_pop])
+    # warm every per-rows jit shape so the timed pass is steady state
+    # (matching the device side, whose compile is excluded above)
+    nonideal.accuracy_proxy_host(space, gh, wls)
+    t0 = time.perf_counter()
+    nonideal.accuracy_proxy_host(space, gh, wls)
+    t_host = (time.perf_counter() - t0) * (pop / host_pop)
+    speedup = t_host / t_dev
+    Bench.record("experiments_accuracy_model", t_dev,
+                 f"pop{pop}_host_loop_{speedup:.0f}x")
+    _metric("accuracy_model_batched_s", t_dev, higher_is_better=False,
+            gated=False)
+    _metric("accuracy_model_speedup_x", speedup, higher_is_better=True,
+            gated=True)
+
+    # full smoke-budget edap_acc search, scan-compiled (steady state)
+    smoke = get_scenario("rram_smoke")
+    b = smoke.budget
+    wa = pack(wls)
+    traced = make_traced_scorer(space, wa,
+                                make_objective(sc.objective))
+    cards = jnp.asarray(space.cardinalities.astype(np.float32))
+    schedule = jnp.asarray(phase_schedule(FOUR_PHASES, b.generations))
+    kern = jax.jit(functools.partial(
+        search_kernel, cards=cards, schedule=schedule,
+        score_fn=traced.score, feasible_fn=traced.feasible,
+        p_h=b.p_h, p_e=b.p_e, p_ga=b.p_ga))
+    jax.block_until_ready(kern(jax.random.PRNGKey(0)))
+    t0 = time.perf_counter()
+    for i in range(max(1, iters // 2)):
+        out = kern(jax.random.PRNGKey(i))
+    jax.block_until_ready(out)
+    t_search = (time.perf_counter() - t0) / max(1, iters // 2)
+    Bench.record("experiments_accuracy_search", t_search,
+                 f"smoke_T{schedule.shape[0]}gen_edap_acc")
+    _metric("accuracy_search_scan_s", t_search, higher_is_better=False,
+            gated=False)
+
+
 def experiments_smoke_run() -> None:
     t0 = time.perf_counter()
     res = run_scenario(get_scenario("rram_smoke"), write=False)
@@ -184,6 +253,7 @@ def experiments_runner() -> None:
     experiments_eval_hot()
     experiments_search_loop()
     experiments_multiseed()
+    experiments_accuracy_scored()
     experiments_smoke_run()
 
 
@@ -200,6 +270,7 @@ def main(argv: Optional[list] = None) -> int:
     if args.smoke:
         experiments_search_loop()
         experiments_multiseed()
+        experiments_accuracy_scored()
         experiments_smoke_run()
     else:
         experiments_runner()

@@ -23,9 +23,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import (Objective, PAPER_4, PAPER_9,
-                        get_space, get_workload_set, joint_search,
-                        make_evaluator, pack)
-from repro.core.nonideal import accuracy_proxy
+                        get_workload_set, pack)
+from repro.core.nonideal import make_accuracy_model
 from repro.core.objectives import per_workload_scores
 from repro.core.pareto import edap_cost_front
 from repro.core.sampling import random_genomes
@@ -218,16 +217,16 @@ def fig7_sequential_ablation():
 
 
 def fig8_nonidealities():
-    """Fig. 8: RRAM non-idealities — accuracy-aware objective."""
+    """Fig. 8: RRAM non-idealities — accuracy-aware objective scored by
+    the batched (jit-compiled) non-ideality model; no host loop."""
     t0 = time.perf_counter()
     sp, wa, ev, _, cap = setup("rram")
     wls = get_workload_set(PAPER_4)
-    key = jax.random.PRNGKey(7)
+    acc_model = jax.jit(make_accuracy_model(sp, wls))
 
     def score_acc(g):
-        m = ev(g)
-        acc = accuracy_proxy(key, sp, np.asarray(g), wls)
-        return Objective("edap_acc", "mean")(m, accuracy=acc)
+        return Objective("edap_acc", "mean")(ev(g),
+                                             accuracy=acc_model(g))
 
     # accuracy-aware joint vs EDAP-only joint vs largest-only w/ accuracy
     joint_acc = run_joint(0, sp, score_acc, cap, g=2)
@@ -237,8 +236,8 @@ def fig8_nonidealities():
     for name, res in (("joint_acc_aware", joint_acc),
                       ("joint_edap_only", joint_edap)):
         d = eval_design(ev, res.best_genome)
-        acc = np.asarray(accuracy_proxy(
-            key, sp, res.best_genome[None], wls))[0]
+        acc = np.asarray(acc_model(
+            jnp.asarray(res.best_genome[None])))[0]
         out[name] = {"design": sp.decode(res.best_genome),
                      "edap_per_workload": d["edap"].tolist(),
                      "accuracy": acc.tolist()}

@@ -17,4 +17,7 @@ from .genetic import (FOUR_PHASES, PLAIN_PHASE, MultiSearchResult, Phase,
 from .workloads import (PAPER_4, PAPER_9, Workload, WorkloadArrays,
                         from_arch_config, get_workload, get_workload_set,
                         pack)
+from .nonideal import (BASELINE_ACC, accuracy_proxy_host,
+                       make_accuracy_model, noisy_crossbar_gemm)
+from .pareto import edap_cost_front, pareto_front
 from . import nonideal, pareto, distributed

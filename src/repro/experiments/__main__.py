@@ -3,7 +3,7 @@
   python -m repro.experiments list [--verbose]
   python -m repro.experiments show --scenario rram_small_set
   python -m repro.experiments run --scenario rram_small_set \
-      [--out DIR] [--seed N] [--seeds S] [--force]
+      [--out DIR] [--seed N] [--seeds S] [--force] [--smoke]
   python -m repro.experiments run --all [--out DIR]
   python -m repro.experiments report [--out DIR]
 
@@ -21,7 +21,7 @@ import os
 import sys
 
 from . import report, runner
-from .scenarios import REGISTRY, get_scenario
+from .scenarios import REGISTRY, SMOKE_BUDGET, get_scenario
 
 
 def cmd_list(args) -> int:
@@ -55,6 +55,8 @@ def cmd_run(args) -> int:
         return 2
     for name in names:
         sc = get_scenario(name)
+        if args.smoke:
+            sc = dataclasses.replace(sc, budget=SMOKE_BUDGET)
         res = runner.run_scenario(sc, out_dir=args.out, force=args.force,
                                   seed=args.seed, n_seeds=args.seeds)
         tag = "cached" if res.get("cached") else \
@@ -115,6 +117,10 @@ def main(argv=None) -> int:
                         "computation and report mean±std EDAP/gap")
     p.add_argument("--force", action="store_true",
                    help="ignore cached results")
+    p.add_argument("--smoke", action="store_true",
+                   help="run with the tiny SMOKE_BUDGET (CI / quick "
+                        "checks); the budget is part of the cache key, "
+                        "so smoke results never shadow full runs")
     p.set_defaults(fn=cmd_run)
 
     p = sub.add_parser("report", help="aggregate results into summary.md")

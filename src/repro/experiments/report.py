@@ -20,6 +20,10 @@ mean±std of the best EDAP score and of the generalization gap across
 the batched seeds (``aggregate_seeds``) — rendered as a seed-robustness
 section in the markdown report.
 
+Accuracy-aware scenarios (§IV-H) add a per-workload accuracy column;
+cost-aware scenarios (§IV-I) attach a ``pareto`` block rendered as an
+EDAP × fabrication-cost Pareto-front table (the Fig. 9 construction).
+
 All JSON artifacts are written with ``sort_keys=True`` and workloads
 are iterated in sorted order, so cached results diff cleanly in CI
 artifact comparisons.
@@ -115,9 +119,13 @@ def render_markdown(result: Dict) -> str:
     ]
     lines += [f"| {k} | {v:g} |" for k, v in g["design"].items()]
     gap = result.get("gap")
+    has_acc = any("accuracy" in m for m in g["per_workload"].values())
     lines += ["", "## Per-workload breakdown", ""]
     hdr = "| workload | energy (mJ) | latency (ms) | EDAP (mJ·ms·mm²) |"
     sep = "|---|---|---|---|"
+    if has_acc:
+        hdr += " accuracy |"
+        sep += "---|"
     if gap:
         hdr += " specific EDAP | gap (%) |"
         sep += "---|---|"
@@ -126,11 +134,36 @@ def render_markdown(result: Dict) -> str:
         m = g["per_workload"][w]
         row = (f"| {w} | {_fmt(m['energy_mJ'])} | {_fmt(m['latency_ms'])} "
                f"| {_fmt(m['edap'])} |")
+        if has_acc:
+            row += f" {_fmt(m.get('accuracy'))} |"
         if gap:
             s_edap = result["specific"][w]["edap"]
             row += (f" {_fmt(s_edap)} | "
                     f"{_fmt(gap['per_workload_pct'][w])} |")
         lines.append(row)
+    pareto = result.get("pareto")
+    if pareto:
+        lines += [
+            "",
+            "## EDAP × fabrication-cost Pareto front (paper Fig. 9)",
+            "",
+            f"{len(pareto['front'])} non-dominated designs out of "
+            f"{pareto['n_candidates']} feasible candidates the search "
+            "visited (final populations, all seeds); cost is the "
+            "technology-normalized fabrication cost alpha(tech) × area "
+            "(Table 7).",
+            "",
+            "| cost (norm·mm²) | EDAP score | tech (nm) | design |",
+            "|---|---|---|---|",
+        ]
+        for p in pareto["front"]:
+            d = p["design"]
+            summary = ", ".join(
+                f"{k}={v:g}" for k, v in d.items()
+                if k in ("xbar_rows", "xbar_cols", "c_per_tile",
+                         "g_per_chip", "bits_cell"))
+            lines.append(f"| {_fmt(p['cost'])} | {_fmt(p['edap'])} "
+                         f"| {p['tech_nm']:g} | {summary} |")
     if gap:
         lines += [
             "",

@@ -14,7 +14,11 @@ axis serves two fan-outs:
     instead of a sequential Python loop — each search scores genomes
     through the *full* workload-set evaluator restricted to its own
     workload column, which is arithmetically identical to packing that
-    workload alone (see make_traced_scorer).
+    workload alone (see make_traced_scorer). This holds for EVERY
+    objective kind: accuracy-aware (§IV-H, ``edap_acc`` — the batched
+    non-ideality model of core/nonideal.py) and cost-aware (§IV-I,
+    ``edap_cost``) scorers compile into the same scanned/vmapped
+    kernels, so no GA scenario ever falls back to a host loop.
 
 On a multi-device runtime the search axis is sharded over the mesh
 'data' axis (core.distributed.compile_batched_search) when the batch
@@ -43,21 +47,18 @@ import numpy as np
 from ..core import (FOUR_PHASES, MultiSearchResult, PLAIN_PHASE,
                     SearchResult, SearchSpace, WorkloadArrays,
                     batched_joint_search, joint_search, make_evaluator,
-                    make_objective, pack, phase_schedule, plain_ga_search,
-                    random_search, search_kernel)
+                    make_objective, nonideal, pack, phase_schedule,
+                    plain_ga_search, random_search, search_kernel)
 from ..core.cost_model import HWConstants, evaluate_population
 from ..core.distributed import compile_batched_search, make_sharded_scorer
 from ..core.objectives import (INFEASIBLE_PENALTY, Objective,
                                per_workload_scores)
+from ..core.pareto import edap_cost_front
+from ..core.search_space import TECH_NODES_NM, TECH_32NM_INDEX
 from . import report
 from .scenarios import Scenario
 
 DEFAULT_OUT_DIR = os.path.join("experiments", "results")
-
-# objective kinds whose per-workload restriction is expressible through
-# per_workload_scores — the precondition for the specific-baseline
-# fan-out (edap_cost/edap_acc fall back to the sequential path)
-_FANOUT_KINDS = ("edap", "edp", "energy", "delay", "area")
 
 
 def make_scorer(space: SearchSpace, wa: WorkloadArrays,
@@ -67,13 +68,24 @@ def make_scorer(space: SearchSpace, wa: WorkloadArrays,
     score_fn: (P, n) genomes -> (P,) scores, sharded over the mesh
     'data' axis when more than one device is visible. evaluator is the
     locally-jitted CostMetrics function (capacity filter, final
-    metrics — tiny batches, not worth sharding).
+    metrics — tiny batches, not worth sharding). Objective kind
+    ``edap_acc`` composes the batched non-ideality accuracy model
+    (core.nonideal.make_accuracy_model) into the score; that path stays
+    on the local device (accuracy is not threaded through the sharded
+    population scorer — search batching shards at the *search* axis
+    instead, see run_search_batched).
     """
     evaluator = make_evaluator(space, wa)
+    acc_fn = None
+    if objective.kind == "edap_acc":
+        acc_fn = jax.jit(nonideal.make_accuracy_model(space, wa))
     n_dev = jax.device_count()
-    if n_dev <= 1:
+    if n_dev <= 1 or acc_fn is not None:
         def score_fn(genomes):
-            return objective(evaluator(genomes))
+            m = evaluator(genomes)
+            if acc_fn is None:
+                return objective(m)
+            return objective(m, accuracy=acc_fn(genomes))
         return score_fn, evaluator
 
     mesh = jax.make_mesh((n_dev,), ("data",))
@@ -97,14 +109,20 @@ class TracedScorer(NamedTuple):
     score/feasible see the whole workload set; score_w/feasible_w
     restrict to one workload column ``w`` (a traced index), matching a
     single-workload pack bit-for-bit: per-workload energy/latency/
-    capacity are computed independently per workload in the cost model,
-    and the same infeasibility/area penalty is applied.
+    capacity (and, for ``edap_acc``, the non-ideality accuracy column)
+    are computed independently per workload, and the same
+    infeasibility/area penalty is applied. EVERY objective kind
+    restricts (core.objectives.per_workload_scores), so the
+    specific-baseline fan-out never needs a host-loop fallback.
+    ``accuracy`` is the batched (P, W) non-ideality model for
+    ``edap_acc`` objectives, None otherwise.
     """
     score: Callable                 # (P, n) -> (P,)
     feasible: Callable              # (P, n) -> (P,) bool
-    score_w: Optional[Callable]     # ((P, n), w) -> (P,)
+    score_w: Callable               # ((P, n), w) -> (P,)
     feasible_w: Callable            # ((P, n), w) -> (P,) bool
     metrics: Callable               # (P, n) -> CostMetrics
+    accuracy: Optional[Callable] = None  # (P, n) -> (P, W)
 
 
 def make_traced_scorer(space: SearchSpace, wa: WorkloadArrays,
@@ -113,11 +131,18 @@ def make_traced_scorer(space: SearchSpace, wa: WorkloadArrays,
                        ) -> TracedScorer:
     table = jnp.asarray(space.value_table())
 
+    acc_fn = None
+    if objective.kind == "edap_acc":
+        acc_fn = nonideal.make_accuracy_model(space, wa)
+
     def metrics(genomes):
         return evaluate_population(space, wa, genomes, constants, table)
 
     def score(genomes):
-        return objective(metrics(genomes))
+        m = metrics(genomes)
+        if acc_fn is None:
+            return objective(m)
+        return objective(m, accuracy=acc_fn(genomes))
 
     def feasible(genomes):
         return metrics(genomes).feasible
@@ -125,17 +150,17 @@ def make_traced_scorer(space: SearchSpace, wa: WorkloadArrays,
     def feasible_w(genomes, w):
         return metrics(genomes).feasible_w[:, w]
 
-    score_w = None
-    if objective.kind in _FANOUT_KINDS:
-        def score_w(genomes, w):
-            m = metrics(genomes)
-            s = per_workload_scores(m, objective.kind)[:, w]
-            bad = (~m.feasible_w[:, w]) | (m.area >
-                                           objective.area_constraint)
-            return jnp.where(bad, INFEASIBLE_PENALTY, s)
+    def score_w(genomes, w):
+        m = metrics(genomes)
+        acc = acc_fn(genomes) if acc_fn is not None else None
+        s = per_workload_scores(m, objective.kind, accuracy=acc)[:, w]
+        bad = (~m.feasible_w[:, w]) | (m.area >
+                                       objective.area_constraint)
+        return jnp.where(bad, INFEASIBLE_PENALTY, s)
 
     return TracedScorer(score=score, feasible=feasible, score_w=score_w,
-                        feasible_w=feasible_w, metrics=metrics)
+                        feasible_w=feasible_w, metrics=metrics,
+                        accuracy=acc_fn)
 
 
 def _search_mesh(n_searches: int):
@@ -278,14 +303,17 @@ def run_specific_sequential(scenario: Scenario, space: SearchSpace,
                             objective: Objective, workloads,
                             seeds: List[int]) -> Dict[str, np.ndarray]:
     """Sequential reference for the specific baselines: one search per
-    (seed, workload), each with its own single-workload pack. Used when
-    the objective kind cannot be column-restricted (edap_cost/edap_acc)
-    or the algorithm is random; also the equivalence oracle for
-    run_specific_fanout (tests/test_experiments.py) where the init
-    paths coincide — i.e. without a capacity filter (SRAM). For RRAM
-    the two paths draw their initial pools differently (device-masked
-    oversampling vs the host rejection loop), so per-seed trajectories
-    legitimately differ; the fan-out is the canonical path there."""
+    (seed, workload), each with its own single-workload pack. Used for
+    the random-search algorithm (a host-driven baseline, not the hot
+    path) and retained as the equivalence oracle for
+    run_specific_fanout (tests/test_experiments.py) — every objective
+    kind, including edap_acc and edap_cost, column-restricts through
+    per_workload_scores, so the fan-out is the canonical path for all
+    GA scenarios. Equivalence is exact where the init paths coincide —
+    i.e. without a capacity filter (SRAM). For RRAM the two paths draw
+    their initial pools differently (device-masked oversampling vs the
+    host rejection loop), so per-seed trajectories legitimately
+    differ."""
     S, W = len(seeds), len(workloads)
     genomes, best_scores, edap = None, np.zeros((S, W)), np.zeros((S, W))
     for i, w in enumerate(workloads):
@@ -310,22 +338,59 @@ def run_specific_sequential(scenario: Scenario, space: SearchSpace,
     return {"genomes": genomes, "best_scores": best_scores, "edap": edap}
 
 
-def _design_metrics(space: SearchSpace, evaluator: Callable,
-                    genome: np.ndarray, objective: Objective,
-                    names) -> Dict:
-    m = evaluator(jnp.asarray(np.asarray(genome)[None]))
+def _design_metrics(space: SearchSpace, traced: TracedScorer,
+                    genome: np.ndarray, names) -> Dict:
+    g = jnp.asarray(np.asarray(genome)[None])
+    m = traced.metrics(g)
     edap = np.asarray(per_workload_scores(m, "edap"))[0]
+    acc = (np.asarray(traced.accuracy(g))[0]
+           if traced.accuracy is not None else None)
+    per = {}
+    for i, n in enumerate(names):
+        per[n] = {"energy_mJ": float(m.energy[0, i]) * 1e3,
+                  "latency_ms": float(m.latency[0, i]) * 1e3,
+                  "edap": float(edap[i])}
+        if acc is not None:
+            per[n]["accuracy"] = float(acc[i])
     return {
         "design": space.decode(genome),
-        "objective_score": float(objective(m)[0]),
+        "objective_score": float(traced.score(g)[0]),
         "area_mm2": float(m.area[0]),
         "feasible": bool(m.feasible[0]),
-        "per_workload": {
-            n: {"energy_mJ": float(m.energy[0, i]) * 1e3,
-                "latency_ms": float(m.latency[0, i]) * 1e3,
-                "edap": float(edap[i])}
-            for i, n in enumerate(names)
-        },
+        "per_workload": per,
+    }
+
+
+def _pareto_block(space: SearchSpace, traced: TracedScorer,
+                  res: MultiSearchResult, objective: Objective) -> Dict:
+    """EDAP × fabrication-cost Pareto front over the candidate designs
+    the search visited (final populations of every seed) — the Fig. 9
+    construction. EDAP keeps the objective's aggregation but drops the
+    cost factor, so the two front axes are the paper's."""
+    cand = np.unique(
+        np.asarray(res.populations).reshape(-1, space.n_params), axis=0)
+    m = traced.metrics(jnp.asarray(cand))
+    edap = np.asarray(
+        Objective("edap", objective.aggregation,
+                  objective.area_constraint)(m))
+    cost = np.asarray(m.cost)
+    ok = np.isfinite(edap) & (edap < INFEASIBLE_PENALTY)
+    cand, edap, cost = cand[ok], edap[ok], cost[ok]
+    idx, e_f, c_f = edap_cost_front(edap, cost)
+    tech_i = (space.index("tech_idx")
+              if "tech_idx" in space.names else None)
+    front = []
+    for j, e, c in zip(idx, e_f, c_f):
+        ti = (int(cand[j, tech_i]) if tech_i is not None
+              else TECH_32NM_INDEX)
+        front.append({"edap": float(e), "cost": float(c),
+                      "tech_nm": float(TECH_NODES_NM[ti]),
+                      "design": space.decode(cand[j])})
+    return {
+        "n_candidates": int(edap.shape[0]),
+        "points": [{"edap": float(e), "cost": float(c)}
+                   for e, c in zip(edap, cost)],
+        "front": front,
     }
 
 
@@ -347,13 +412,18 @@ def run_scenario(scenario: Scenario,
     seed = scenario.seed if seed is None else seed
     n_seeds = scenario.budget.n_seeds if n_seeds is None else n_seeds
     seeds = [seed + j for j in range(n_seeds)]
+    budget_dict = dataclasses.asdict(scenario.budget)
     sdir = os.path.join(out_dir, scenario.name)
     cache = os.path.join(sdir, "result.json")
     if write and not force and os.path.exists(cache):
         with open(cache) as f:
             cached = json.load(f)
         if (cached.get("seed") == seed
-                and cached.get("n_seeds", 1) == n_seeds):
+                and cached.get("n_seeds", 1) == n_seeds
+                and cached.get("budget") == budget_dict):
+            # budget is part of the cache key: a --smoke run must not
+            # shadow a full-budget result (and vice versa); legacy
+            # results without a budget field recompute once
             cached["cached"] = True
             return cached
 
@@ -387,23 +457,29 @@ def run_scenario(scenario: Scenario,
         "description": scenario.description,
         "seed": seed,
         "n_seeds": n_seeds,
+        "budget": budget_dict,
         "workloads": list(wa.names),
         "best_score": float(best.best_score),
-        "generalized": _design_metrics(space, evaluator, best.best_genome,
-                                       objective, wa.names),
+        "generalized": _design_metrics(space, traced, best.best_genome,
+                                       wa.names),
         "history": np.asarray(best.history).tolist(),
         "search_wall_time_s": res.wall_time_s,
         "sampling_time_s": res.sampling_time_s,
         "cached": False,
     }
+    if objective.kind == "edap_cost":
+        # §IV-I: the EDAP × fabrication-cost trade-off the search
+        # explored (Fig. 9's front), from the final populations
+        result["pareto"] = _pareto_block(space, traced, res, objective)
 
     # Workload-specific baselines: the same algorithm/budget aimed at
     # each workload alone — the normalization the paper's gap claims
     # (and Fig. 5) are built on. All (seed x workload) searches run as
-    # one batched device call when the objective supports it.
+    # one batched device call for every GA algorithm and objective
+    # kind; only the random-search baseline stays sequential.
     gap_means = None
     if scenario.specific_baselines and len(workloads) > 1:
-        use_fanout = (specific_fanout and traced.score_w is not None
+        use_fanout = (specific_fanout
                       and scenario.algorithm != "random")
         if use_fanout:
             spec = run_specific_fanout(scenario, space, traced, seeds,

@@ -145,6 +145,31 @@ def _build_registry() -> Dict[str, Scenario]:
         description=("SRAM IMC co-optimized for the assigned LM "
                      "architecture set (examples/codesign_lm_archs.py)"),
     ))
+    # §IV-H (Eq. 4): accuracy-aware RRAM co-design — EDAP / prod(Acc_w)
+    # with the batched non-ideality model (core/nonideal.py) scoring
+    # the BASELINE_ACC workloads inside the compiled search.
+    add(Scenario(
+        name="rram_accuracy", mem="rram", workloads=PAPER_4,
+        algorithm="fourphase", objective="edap_acc:mean",
+        paper_ref="§IV-H (Eq. 4)",
+        description=("RRAM IMC, small set (4 workloads), accuracy-aware "
+                     "objective: EDAP divided by the product of "
+                     "non-ideality-degraded accuracies (device-resident "
+                     "noisy-crossbar model)"),
+    ))
+    # §IV-I (Fig. 9 / Table 7): technology as a search variable, cost-
+    # aware objective — EDAP with alpha(tech) * area replacing raw area;
+    # the runner attaches the EDAP × cost Pareto front to the result.
+    for mem in ("rram", "sram"):
+        add(Scenario(
+            name=f"{mem}_tech_cost", mem=mem, workloads=PAPER_4,
+            algorithm="fourphase", objective="edap_cost:mean",
+            tech_variable=True, paper_ref="Fig. 9 / Table 7",
+            description=(f"{mem.upper()} IMC, small set (4 workloads), "
+                         "technology node in the genome, fabrication-"
+                         "cost-aware objective + EDAP×cost Pareto "
+                         "front"),
+        ))
     return reg
 
 

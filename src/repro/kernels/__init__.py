@@ -3,8 +3,11 @@
 - imc_matmul: bit-serial IMC crossbar GEMM simulation (paper §IV-H's
   hot spot, TPU-adapted — see DESIGN.md §3)
 - flash_attention: blockwise causal/windowed attention for the LM stack
+- adc: the shared signed-delta ADC model (single source of truth for
+  the kernel, its oracle, and core/nonideal.py's accuracy model)
 
 Validated in interpret mode against the pure-jnp oracles in ref.py.
 """
+from .adc import adc_full_scale, adc_quantize
 from .ops import flash_mha, imc_gemm
-from . import ref
+from . import adc, ref

@@ -1,0 +1,48 @@
+"""The ONE ADC quantization model shared by every crossbar simulation.
+
+Before PR 3 the repo carried two divergent ADC conventions: the Pallas
+kernel (and its oracle in ref.py) quantized per-tile partial sums with a
+signed-delta mid-tread ADC, while core/nonideal.py used an unrelated
+[-1, 1] uniform quantizer with its own level count. The accuracy
+objective and the kernel therefore disagreed about the hardware they
+were simulating. This module is the single source of truth both sides
+import; tests/test_kernels.py pins the kernel against it and
+tests/test_nonideal.py pins the accuracy model's GEMM path against the
+kernel.
+
+Convention (signed mid-tread ADC, code range [-2^(b-1), 2^(b-1) - 1]):
+
+    delta = full_scale / 2^(bits - 1)
+    q(x)  = clip(round(x / delta), -2^(b-1), 2^(b-1) - 1) * delta
+
+``adc_full_scale(xbar_rows)`` fixes the analog full-scale range the
+cost/accuracy models and the kernel share: R rows of 1-bit activations
+against |w| <= w_scale conductances, scaled by the rows/4
+typical-column-occupancy factor (saturation beyond it is part of the
+modeled non-ideality). All arguments may be traced values — the
+accuracy model resolves ``xbar_rows`` per genome inside jit.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# 8-bit activations streamed as bit-serial planes everywhere.
+WEIGHT_BITS = 8
+
+
+def adc_full_scale(xbar_rows, w_scale: float = 1.0):
+    """Analog full-scale range of one column sum for an R-row tile."""
+    return w_scale * xbar_rows / 4.0
+
+
+def adc_quantize(x: jax.Array, full_scale, bits: int = 8) -> jax.Array:
+    """Signed-delta mid-tread ADC transfer function (traceable).
+
+    ``full_scale`` may be a traced scalar (per-genome rows resolve at
+    trace time in the accuracy model); ``bits`` is static.
+    """
+    delta = full_scale / (2.0 ** (bits - 1))
+    lo = -(2.0 ** (bits - 1))
+    hi = 2.0 ** (bits - 1) - 1.0
+    return jnp.clip(jnp.round(x / delta), lo, hi) * delta

@@ -23,7 +23,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-WEIGHT_BITS = 8
+from .adc import WEIGHT_BITS, adc_full_scale, adc_quantize
 
 
 def _imc_kernel(x_ref, w_ref, o_ref, *, adc_bits: int, xbar_rows: int,
@@ -37,12 +37,9 @@ def _imc_kernel(x_ref, w_ref, o_ref, *, adc_bits: int, xbar_rows: int,
     x = x_ref[...].astype(jnp.int32)          # (bm, R) unsigned 8-bit acts
     w = w_ref[...].astype(jnp.float32)        # (R, bn) pre-noised weights
 
-    # ADC full scale: R rows of 1-bit activations against |w|<=w_scale,
-    # with the ref model's rows/4 typical-occupancy scaling.
-    full_scale = w_scale * xbar_rows / 4.0
-    delta = full_scale / (2.0 ** (adc_bits - 1))
-    lo = -(2.0 ** (adc_bits - 1))
-    hi = 2.0 ** (adc_bits - 1) - 1.0
+    # Shared ADC convention (kernels/adc.py): signed-delta mid-tread
+    # quantization of each tile's analog column sum.
+    full_scale = adc_full_scale(xbar_rows, w_scale)
 
     acc = jnp.zeros_like(o_ref)
     for b in range(WEIGHT_BITS):
@@ -50,8 +47,7 @@ def _imc_kernel(x_ref, w_ref, o_ref, *, adc_bits: int, xbar_rows: int,
         partial = jax.lax.dot_general(
             bit, w, (((1,), (0,)), ((), ())),
             preferred_element_type=jnp.float32)
-        q = jnp.clip(jnp.round(partial / delta), lo, hi) * delta  # ADC
-        acc = acc + q * (2.0 ** b)
+        acc = acc + adc_quantize(partial, full_scale, adc_bits) * (2.0 ** b)
     o_ref[...] += acc
 
 

@@ -4,14 +4,15 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-WEIGHT_BITS = 8
+from .adc import WEIGHT_BITS, adc_full_scale, adc_quantize
 
 
 def imc_matmul_ref(x_q: jax.Array, w: jax.Array, *, xbar_rows: int = 256,
                    adc_bits: int = 8, w_scale: float = 1.0) -> jax.Array:
     """Bit-serial crossbar GEMM oracle. x_q: (M, K) int32 in [0, 255];
     w: (K, N) f32. Per (K-tile, bit-plane) partial sums are
-    ADC-quantized then shift-accumulated — same math as the kernel."""
+    ADC-quantized (shared convention: kernels/adc.py) then
+    shift-accumulated — same math as the kernel."""
     M, K = x_q.shape
     N = w.shape[1]
     assert K % xbar_rows == 0
@@ -19,16 +20,12 @@ def imc_matmul_ref(x_q: jax.Array, w: jax.Array, *, xbar_rows: int = 256,
     xt = x_q.reshape(M, n_tiles, xbar_rows)
     wt = w.reshape(n_tiles, xbar_rows, N)
 
-    full_scale = w_scale * xbar_rows / 4.0
-    delta = full_scale / (2.0 ** (adc_bits - 1))
-    lo = -(2.0 ** (adc_bits - 1))
-    hi = 2.0 ** (adc_bits - 1) - 1.0
-
+    full_scale = adc_full_scale(xbar_rows, w_scale)
     out = jnp.zeros((M, N), jnp.float32)
     for b in range(WEIGHT_BITS):
         bit = ((xt >> b) & 1).astype(jnp.float32)
         partial = jnp.einsum("mtk,tkn->mtn", bit, wt.astype(jnp.float32))
-        q = jnp.clip(jnp.round(partial / delta), lo, hi) * delta
+        q = adc_quantize(partial, full_scale, adc_bits)
         out = out + jnp.sum(q, axis=1) * (2.0 ** b)
     return out
 

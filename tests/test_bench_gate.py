@@ -69,3 +69,9 @@ def test_committed_baseline_gates_search_speedup():
     assert m["search_scan_speedup_x"]["value"] * 0.7 >= 3.0
     for name in ("search_loop_scan_s", "search_loop_host_s"):
         assert name in m
+    # the §IV-H accuracy model's batched-vs-host-loop speedup is gated
+    # the same way (bench_experiments.experiments_accuracy_scored)
+    assert m["accuracy_model_speedup_x"]["gated"]
+    assert m["accuracy_model_speedup_x"]["higher_is_better"]
+    assert m["accuracy_model_speedup_x"]["value"] * 0.7 >= 3.0
+    assert "accuracy_model_batched_s" in m

@@ -34,6 +34,17 @@ def test_registry_exposes_paper_grid():
             assert f"{mem}_{s}_plain" in names
             assert f"{mem}_{s}_random" in names
         assert f"{mem}_smoke" in names
+    # §IV-H accuracy-aware and §IV-I technology-cost design points
+    assert "rram_accuracy" in names
+    acc = get_scenario("rram_accuracy")
+    assert acc.objective.startswith("edap_acc")
+    assert acc.workloads == ("resnet18", "vgg16", "alexnet",
+                             "mobilenetv3")
+    for mem in ("rram", "sram"):
+        tc = get_scenario(f"{mem}_tech_cost")
+        assert tc.objective.startswith("edap_cost")
+        assert tc.tech_variable
+        assert "tech_idx" in tc.space().names
 
 
 def test_every_scenario_resolves():
@@ -144,27 +155,88 @@ def test_multiseed_aggregation():
     assert r2["seeds"]["count"] == 2
 
 
-def test_specific_fanout_matches_sequential():
+@pytest.mark.parametrize("objective,tech", [
+    ("edap:mean", False),
+    ("edap_acc:mean", False),   # §IV-H: accuracy-aware
+    ("edap_cost:mean", True),   # §IV-I: cost-aware, variable tech
+])
+def test_specific_fanout_matches_sequential(objective, tech):
     """The (seed x workload) specific-baseline fan-out (one batched
-    device call) reproduces the sequential per-workload loop's EDAPs.
+    device call) reproduces the sequential per-workload loop's EDAPs —
+    for EVERY objective kind, including the accuracy- and cost-aware
+    ones that previously fell back to the sequential path.
 
     SRAM on purpose: without a capacity filter both paths draw the
     identical initial pool, so the equivalence is exact; with one
     (RRAM) the init draws legitimately differ (device-masked
     oversampling vs host rejection loop — see run_specific_sequential).
     """
-    space = TINY.space()
-    wls = TINY.resolve_workloads()
+    sc = dataclasses.replace(TINY, objective=objective,
+                             tech_variable=tech)
+    space = sc.space()
+    wls = sc.resolve_workloads()
     from repro.core import make_objective, pack
-    obj = make_objective(TINY.objective)
+    obj = make_objective(sc.objective)
     traced = make_traced_scorer(space, pack(wls), obj)
     seeds = [0, 1]
-    fan = run_specific_fanout(TINY, space, traced, seeds, len(wls))
-    seq = run_specific_sequential(TINY, space, obj, wls, seeds)
+    fan = run_specific_fanout(sc, space, traced, seeds, len(wls))
+    seq = run_specific_sequential(sc, space, obj, wls, seeds)
     assert fan["edap"].shape == (2, len(wls))
     np.testing.assert_allclose(fan["edap"], seq["edap"], rtol=1e-4)
     np.testing.assert_allclose(fan["best_scores"], seq["best_scores"],
                                rtol=1e-4)
+
+
+def test_accuracy_scenario_runs_device_resident(tmp_path):
+    """A tiny edap_acc scenario end-to-end: batched accuracy model in
+    the compiled search, accuracy in the generalized block, specific
+    baselines via the fan-out, artifacts rendered."""
+    sc = dataclasses.replace(TINY, name="tiny_acc",
+                             objective="edap_acc:mean")
+    res = run_scenario(sc, out_dir=str(tmp_path))
+    assert res["best_score"] < 1e29
+    per = res["generalized"]["per_workload"]
+    for m in per.values():
+        assert 0.2 < m["accuracy"] <= 1.0
+    assert np.isfinite(res["gap"]["mean_pct"])
+    md = open(os.path.join(str(tmp_path), "tiny_acc",
+                           "report.md")).read()
+    assert "accuracy" in md
+
+
+def test_tech_cost_scenario_attaches_pareto(tmp_path):
+    """A tiny edap_cost scenario: variable-technology space, pareto
+    block in the result, Fig. 9 section in the report."""
+    sc = dataclasses.replace(TINY, name="tiny_cost",
+                             objective="edap_cost:mean",
+                             tech_variable=True)
+    res = run_scenario(sc, out_dir=str(tmp_path), n_seeds=2)
+    p = res["pareto"]
+    assert p["n_candidates"] >= len(p["front"]) >= 1
+    costs = [f["cost"] for f in p["front"]]
+    edaps = [f["edap"] for f in p["front"]]
+    assert costs == sorted(costs)
+    assert edaps == sorted(edaps, reverse=True)
+    for f in p["front"]:
+        assert f["tech_nm"] in (90, 65, 45, 32, 22, 14, 10, 7)
+        assert "xbar_rows" in f["design"]
+    md = open(os.path.join(str(tmp_path), "tiny_cost",
+                           "report.md")).read()
+    assert "Pareto front" in md
+
+
+def test_budget_is_part_of_cache_key(tmp_path):
+    """A smoke-budget run must not be served from a full-budget cache
+    (and vice versa) — the --smoke CLI flag relies on this."""
+    out = str(tmp_path)
+    r1 = run_scenario(TINY, out_dir=out)
+    assert run_scenario(TINY, out_dir=out)["cached"]
+    other = dataclasses.replace(
+        TINY, budget=dataclasses.replace(TINY.budget, generations=2))
+    r2 = run_scenario(other, out_dir=out)
+    assert not r2["cached"]
+    assert r2["budget"]["generations"] == 2
+    assert r1["budget"]["generations"] == 1
 
 
 def test_artifacts_deterministic_json(tmp_path):

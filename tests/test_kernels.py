@@ -1,10 +1,13 @@
 """Kernel validation: shape/dtype sweeps, interpret-mode vs ref oracle
-(deliverable c: per-kernel allclose against ref.py)."""
+(deliverable c: per-kernel allclose against ref.py), and the unified
+ADC contract shared with core/nonideal.py."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.kernels.adc import adc_full_scale, adc_quantize
+from repro.kernels.imc_matmul import imc_matmul
 from repro.kernels.ops import flash_mha, imc_gemm
 from repro.kernels.ref import attention_ref, imc_matmul_ref
 
@@ -32,6 +35,49 @@ def test_imc_matmul_adc_bits(adc_bits):
     y_ref = imc_matmul_ref(x, w, xbar_rows=128, adc_bits=adc_bits)
     np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
                                rtol=1e-6, atol=1e-4)
+
+
+def test_adc_quantize_idempotent_and_saturating():
+    """Shared ADC transfer function (kernels/adc.py): quantizing twice
+    is quantizing once, and codes saturate at the signed range."""
+    fs = adc_full_scale(256)  # 64.0
+    x = jnp.linspace(-2.0 * fs, 2.0 * fs, 257)
+    q1 = adc_quantize(x, fs, 8)
+    q2 = adc_quantize(q1, fs, 8)
+    np.testing.assert_allclose(np.asarray(q1), np.asarray(q2), atol=1e-6)
+    delta = fs / 128.0
+    assert float(jnp.max(q1)) == 127 * delta
+    assert float(jnp.min(q1)) == -128 * delta
+    # traced full_scale (the accuracy model resolves rows per genome)
+    q3 = jax.jit(lambda v, f: adc_quantize(v, f, 8))(x, jnp.asarray(fs))
+    np.testing.assert_allclose(np.asarray(q3), np.asarray(q1), atol=1e-6)
+
+
+def test_imc_matmul_interpret_matches_nonideal_gemm():
+    """ADC unification pin: the Pallas kernel (interpret=True) computes
+    the SAME noisy-crossbar GEMM as core/nonideal.py — noised weights in,
+    bit-serial per-tile signed-delta ADC out."""
+    from repro.core import nonideal
+    key = jax.random.PRNGKey(3)
+    x = jax.random.uniform(key, (8, 256))
+    w = jax.random.normal(key, (256, 16)) * 0.3
+    x_q = nonideal.quantize_activations(x)
+    k_pos, k_neg, _ = jax.random.split(key, 3)
+    w_eff = nonideal._noised_weights(k_pos, k_neg, w,
+                                     jnp.asarray(128.0))
+    y_kernel = imc_matmul(x_q, w_eff, xbar_rows=128, block_m=8,
+                          block_n=16, interpret=True)
+    y_ref = imc_matmul_ref(x_q, w_eff, xbar_rows=128)
+    np.testing.assert_allclose(np.asarray(y_kernel), np.asarray(y_ref),
+                               rtol=1e-6, atol=1e-4)
+    # and both equal the full nonideal GEMM minus its output noise term
+    y_full = nonideal.noisy_crossbar_gemm(key, x, w, xbar_rows=128)
+    k_out = jax.random.split(key, 3)[2]
+    noise = (nonideal.OUTPUT_NOISE_FRAC * jnp.std(y_ref / 255.0)
+             * jax.random.normal(k_out, y_ref.shape))
+    np.testing.assert_allclose(np.asarray(y_full),
+                               np.asarray(y_ref / 255.0 + noise),
+                               rtol=1e-5, atol=1e-5)
 
 
 def test_imc_lower_adc_bits_more_error():

@@ -1,6 +1,7 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.core import Objective, PAPER_4, get_space, get_workload_set, \
     make_evaluator, pack, random_genomes
@@ -54,3 +55,19 @@ def test_per_workload_scores_shape():
     s = per_workload_scores(m, "edap")
     assert s.shape == (32, 4)
     assert np.all(np.asarray(s) > 0)
+
+
+def test_per_workload_scores_cost_and_acc_kinds():
+    """Every objective kind column-restricts — the contract the
+    specific-baseline fan-out relies on (no sequential fallback)."""
+    m = _m()
+    s_cost = np.asarray(per_workload_scores(m, "edap_cost"))
+    s_edap = np.asarray(per_workload_scores(m, "edap"))
+    assert s_cost.shape == (32, 4)
+    # cost = alpha(tech) * area; at fixed 32nm alpha=1 so cost == area
+    np.testing.assert_allclose(s_cost, s_edap, rtol=1e-5)
+    acc = jnp.full((32, 4), 0.8)
+    s_acc = np.asarray(per_workload_scores(m, "edap_acc", accuracy=acc))
+    np.testing.assert_allclose(s_acc, s_edap / 0.8, rtol=1e-5)
+    with pytest.raises(AssertionError):
+        per_workload_scores(m, "edap_acc")  # accuracy is required
