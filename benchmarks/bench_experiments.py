@@ -15,6 +15,16 @@ Cells:
                              perf gate pins (benchmarks/baseline.json).
   experiments_multiseed    — S independent seeds as ONE vmapped device
                              call vs S sequential scan searches.
+  experiments_nsga_scan    — the multi-objective tentpole: one full
+                             smoke-budget NSGA-II search (non-dominated
+                             sorting, crowding, tournament and
+                             environmental selection inside ONE
+                             compiled lax.scan — zero per-generation
+                             host syncs) vs the host-loop reference
+                             (core.nsga.run_nsga_loop, one Python
+                             round-trip per generation). The
+                             scan-vs-host speedup is gated like the
+                             single-objective search cell.
   experiments_accuracy_scored — §IV-H hot path: the batched
                              non-ideality accuracy model vs the
                              retained host per-genome loop at
@@ -176,6 +186,59 @@ def experiments_multiseed(n_seeds: int = 4, iters: int = 4) -> None:
             higher_is_better=True, gated=False)
 
 
+def experiments_nsga_scan(iters: int = 8) -> None:
+    """Scan-compiled NSGA-II vs the host-driven generation loop at the
+    smoke budget, on the rram_tech_cost_mo scenario's EDAP × cost
+    objective pair. Equal work on both sides: the same initial
+    population feeds the jitted ``nsga_scan`` and ``run_nsga_loop``,
+    so the gated speedup isolates exactly the per-generation host
+    round-trips the scan removes (the identical generation math —
+    tests/test_nsga.py pins the trajectories). Steady state — jits
+    warmed before timing."""
+    from repro.core import random_genomes as rand_g, run_nsga_loop
+    from repro.core.nsga import nsga_scan
+    from repro.experiments import SMOKE_BUDGET
+
+    sc = get_scenario("rram_tech_cost_mo")
+    b = SMOKE_BUDGET
+    space = sc.space()
+    wa = pack(sc.resolve_workloads())
+    traced = make_traced_scorer(space, wa, make_objective(sc.objective))
+    cards = jnp.asarray(space.cardinalities.astype(np.float32))
+    schedule = jnp.asarray(phase_schedule(FOUR_PHASES, b.generations))
+    init = rand_g(jax.random.PRNGKey(0), space, b.p_ga)
+    kern = jax.jit(functools.partial(
+        nsga_scan, cards=cards, schedule=schedule,
+        score_vec=traced.score_vec))
+
+    jax.block_until_ready(kern(jax.random.PRNGKey(0), init))  # compile
+    t0 = time.perf_counter()
+    for i in range(iters):
+        out = kern(jax.random.PRNGKey(i), init)
+    jax.block_until_ready(out)
+    t_scan = (time.perf_counter() - t0) / iters
+
+    run_loop = functools.partial(run_nsga_loop, space=space,
+                                 score_vec=traced.score_vec,
+                                 init_pop=init, phases=FOUR_PHASES,
+                                 generations_per_phase=b.generations)
+    run_loop(jax.random.PRNGKey(0))  # warm the cached step jit
+    t0 = time.perf_counter()
+    for i in range(iters):
+        run_loop(jax.random.PRNGKey(i))
+    t_host = (time.perf_counter() - t0) / iters
+
+    speedup = t_host / t_scan
+    Bench.record("experiments_nsga_scan", t_scan,
+                 f"smoke_T{schedule.shape[0]}gen_D2")
+    Bench.record("experiments_nsga_hostloop", t_host,
+                 f"nsga_scan_speedup_{speedup:.1f}x")
+    _metric("nsga_scan_s", t_scan, higher_is_better=False, gated=False)
+    _metric("nsga_host_s", t_host, higher_is_better=False, gated=False)
+    _metric("nsga_scan_speedup_x", speedup, higher_is_better=True,
+            gated=True)
+
+
 def experiments_accuracy_scored(pop: int = 64, host_pop: int = 8,
                                 iters: int = 5) -> None:
     """Accuracy-scored search hot path (§IV-H): the batched (vmapped,
@@ -253,6 +316,7 @@ def experiments_runner() -> None:
     experiments_eval_hot()
     experiments_search_loop()
     experiments_multiseed()
+    experiments_nsga_scan()
     experiments_accuracy_scored()
     experiments_smoke_run()
 
@@ -270,6 +334,7 @@ def main(argv: Optional[list] = None) -> int:
     if args.smoke:
         experiments_search_loop()
         experiments_multiseed()
+        experiments_nsga_scan()
         experiments_accuracy_scored()
         experiments_smoke_run()
     else:

@@ -6,8 +6,9 @@ from .search_space import (SearchSpace, get_space, rram_space, sram_space,
                            reduced_rram_space)
 from .cost_model import (CostMetrics, HWConstants, evaluate_population,
                          make_evaluator)
-from .objectives import (Objective, make_objective, per_workload_scores,
-                         AREA_CONSTRAINT_MM2)
+from .objectives import (MultiObjective, Objective, is_multi_spec,
+                         make_multi_objective, make_objective,
+                         per_workload_scores, AREA_CONSTRAINT_MM2)
 from .sampling import (hamming_select, random_genomes, sample_initial,
                        sample_initial_device, uniform_genomes)
 from .genetic import (FOUR_PHASES, PLAIN_PHASE, MultiSearchResult, Phase,
@@ -19,5 +20,10 @@ from .workloads import (PAPER_4, PAPER_9, Workload, WorkloadArrays,
                         pack)
 from .nonideal import (BASELINE_ACC, accuracy_proxy_host,
                        make_accuracy_model, noisy_crossbar_gemm)
-from .pareto import edap_cost_front, pareto_front
-from . import nonideal, pareto, distributed
+from .nsga import (MOSearchResult, MultiMOSearchResult,
+                   batched_nsga_search, crowding_distance,
+                   nondominated_rank, nsga_scan, nsga_search,
+                   nsga_search_kernel, run_nsga_loop)
+from .pareto import (edap_cost_front, front_coverage, hypervolume_2d,
+                     pareto_front)
+from . import nonideal, nsga, pareto, distributed

@@ -10,11 +10,20 @@ Aggregations over the workload axis (§IV-C):
   all  — f = prod(E_w) * prod(L_w) * A
 Units: energy mJ, latency ms, area mm² (so EDAP lands in the paper's
 mJ·ms·mm² scale).
+
+Multi-objective specs: ``"edap:mean+cost"`` parses into a
+``MultiObjective`` — a tuple of component Objectives evaluated into a
+``(P, D)`` score *matrix* (one column per component, each with its own
+feasibility/area penalty). That matrix is what the device-resident
+NSGA-II engine (core/nsga.py) non-dominated-sorts inside the compiled
+search, so any pair of objective kinds (e.g. ``edap:mean`` × ``cost``
+for the §IV-I front, or ``edap_acc:mean`` × ``edap:mean``) can be
+searched jointly.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import Optional, Tuple, Union
 
 import jax.numpy as jnp
 
@@ -42,7 +51,8 @@ def _agg(x, scheme: str):
 
 @dataclasses.dataclass(frozen=True)
 class Objective:
-    """kind: edap | edp | energy | delay | area | edap_cost | edap_acc"""
+    """kind: edap | edp | energy | delay | area | cost | edap_cost |
+    edap_acc"""
     kind: str = "edap"
     aggregation: str = "max"
     area_constraint: float = AREA_CONSTRAINT_MM2
@@ -62,6 +72,10 @@ class Objective:
             s = l_ms
         elif self.kind == "area":
             s = a
+        elif self.kind == "cost":
+            # §IV-I axis: fabrication cost alpha(tech) * area alone —
+            # one column of the EDAP × cost multi-objective front
+            s = m.cost
         elif self.kind == "edap_cost":
             # §IV-I: cost = alpha * A replaces the raw area term
             s = e_mj * l_ms * m.cost
@@ -77,18 +91,73 @@ class Objective:
         return jnp.where(bad, _BIG, s)
 
 
-OBJECTIVE_KINDS = ("edap", "edp", "energy", "delay", "area", "edap_cost",
-                   "edap_acc")
+OBJECTIVE_KINDS = ("edap", "edp", "energy", "delay", "area", "cost",
+                   "edap_cost", "edap_acc")
 AGGREGATIONS = ("max", "mean", "all")
 
 
+@dataclasses.dataclass(frozen=True)
+class MultiObjective:
+    """A tuple of Objectives evaluated into a (P, D) score matrix.
+
+    Each column keeps its component's own feasibility/area penalty
+    (+inf-like ``INFEASIBLE_PENALTY``), so an infeasible design never
+    dominates a feasible one under the (le, lt) dominance used by the
+    NSGA-II kernel. ``accuracy`` is forwarded to every component (only
+    ``edap_acc`` consumes it)."""
+    components: Tuple[Objective, ...]
+
+    def __post_init__(self):
+        if len(self.components) < 2:
+            raise ValueError("MultiObjective needs >= 2 components")
+
+    @property
+    def kinds(self) -> Tuple[str, ...]:
+        return tuple(o.kind for o in self.components)
+
+    @property
+    def n_objectives(self) -> int:
+        return len(self.components)
+
+    def __call__(self, m: CostMetrics,
+                 accuracy: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+        return jnp.stack([o(m, accuracy=accuracy)
+                          for o in self.components], axis=-1)
+
+
+AnyObjective = Union[Objective, MultiObjective]
+
+
+def is_multi_spec(spec: str) -> bool:
+    """True for '+'-joined multi-objective specs ('edap:mean+cost')."""
+    return "+" in spec
+
+
+def make_multi_objective(spec: str,
+                         area_constraint: float = AREA_CONSTRAINT_MM2,
+                         ) -> MultiObjective:
+    """Parse a '+'-joined spec into a MultiObjective
+    (``"edap:mean+cost"`` -> columns edap:mean, cost)."""
+    parts = [p.strip() for p in spec.split("+")]
+    if len(parts) < 2 or not all(parts):
+        raise ValueError(f"multi-objective spec {spec!r} needs >= 2 "
+                         "'+'-separated components")
+    return MultiObjective(tuple(make_objective(p, area_constraint)
+                                for p in parts))
+
+
 def make_objective(spec: str,
-                   area_constraint: float = AREA_CONSTRAINT_MM2) -> Objective:
+                   area_constraint: float = AREA_CONSTRAINT_MM2,
+                   ) -> AnyObjective:
     """Parse an objective spec string into an Objective.
 
     Accepts ``"edap"`` (default max aggregation) or ``"edap:mean"``,
     ``"edp:all"``, ... — the scenario-pluggable form used by the
-    experiment registry (experiments/scenarios.py)."""
+    experiment registry (experiments/scenarios.py). A '+'-joined spec
+    (``"edap:mean+cost"``) returns a MultiObjective whose (P, D) score
+    matrix the NSGA-II engine searches directly."""
+    if is_multi_spec(spec):
+        return make_multi_objective(spec, area_constraint)
     kind, _, agg = spec.partition(":")
     agg = agg or "max"
     if kind not in OBJECTIVE_KINDS:
@@ -127,6 +196,8 @@ def per_workload_scores(m: CostMetrics, kind: str = "edap",
         return l_ms
     if kind == "area":
         return jnp.broadcast_to(a, e_mj.shape)
+    if kind == "cost":
+        return jnp.broadcast_to(m.cost[:, None], e_mj.shape)
     if kind == "edap_cost":
         return e_mj * l_ms * m.cost[:, None]
     if kind == "edap_acc":

@@ -31,6 +31,50 @@ def pareto_front(points: np.ndarray) -> np.ndarray:
     return np.nonzero(~dominated)[0]
 
 
+def hypervolume_2d(points: np.ndarray, ref: np.ndarray) -> float:
+    """Hypervolume (minimize-both) of a 2-D point set wrt ``ref``.
+
+    The Lebesgue measure of the region dominated by the set and bounded
+    by the reference point — the searched-vs-post-hoc front comparison
+    metric in the experiment reports (larger = better front). Points at
+    or beyond ``ref`` in either dimension contribute nothing. O(n log n):
+    reduce to the non-dominated subset, sweep by x ascending
+    (y then strictly descends), sum the (ref_x - x) × (y_prev - y)
+    slabs."""
+    pts = np.asarray(points, np.float64)
+    ref = np.asarray(ref, np.float64)
+    if pts.ndim != 2 or pts.shape[1] != 2:
+        raise ValueError(f"hypervolume_2d needs (N, 2) points, "
+                         f"got {pts.shape}")
+    pts = pts[np.all(pts < ref[None, :], axis=1)]
+    if pts.shape[0] == 0:
+        return 0.0
+    pts = pts[pareto_front(pts)]
+    pts = pts[np.argsort(pts[:, 0], kind="stable")]
+    hv = 0.0
+    y_prev = ref[1]
+    for x, y in pts:
+        if y < y_prev:  # duplicates / x-ties add no area
+            hv += (ref[0] - x) * (y_prev - y)
+            y_prev = y
+    return float(hv)
+
+
+def front_coverage(a: np.ndarray, b: np.ndarray) -> float:
+    """Zitzler's C-metric C(A, B): the fraction of points in ``b``
+    weakly dominated by (<= everywhere) some point of ``a``. C = 1
+    means A covers B entirely; C(A, B) and C(B, A) are independent."""
+    a = np.asarray(a, np.float64)
+    b = np.asarray(b, np.float64)
+    if b.shape[0] == 0:
+        return 0.0
+    if a.shape[0] == 0:
+        return 0.0
+    covered = np.any(np.all(a[:, None, :] <= b[None, :, :], axis=2),
+                     axis=0)
+    return float(np.mean(covered))
+
+
 def edap_cost_front(edap: np.ndarray, cost: np.ndarray,
                     ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
     """Pareto front over (EDAP, fabrication cost); returns (idx, edap, cost)

@@ -69,9 +69,16 @@ def cmd_run(args) -> int:
             bs = seeds["best_score"]
             seed_s = (f" [{seeds['count']} seeds: "
                       f"{bs['mean']:.4g} ± {bs['std']:.3g}]")
+        front_s = ""
+        pareto = res.get("pareto")
+        if pareto and pareto.get("searched"):
+            front_s = f", searched front: {len(pareto['front'])} designs"
+            if pareto.get("hypervolume") is not None:
+                front_s += f" (HV {pareto['hypervolume']:.4g})"
         print(f"[{tag}] {name}: best {res['objective']} score "
               f"{res['best_score']:.4g}, area "
-              f"{res['generalized']['area_mm2']:.1f} mm²{gap_s}{seed_s}")
+              f"{res['generalized']['area_mm2']:.1f} mm²"
+              f"{gap_s}{seed_s}{front_s}")
         print(f"  -> {args.out}/{name}/result.json (+ report.md)")
     return 0
 

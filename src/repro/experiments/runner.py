@@ -20,6 +20,14 @@ axis serves two fan-outs:
     ``edap_cost``) scorers compile into the same scanned/vmapped
     kernels, so no GA scenario ever falls back to a host loop.
 
+Multi-objective scenarios ('+'-joined objective specs, e.g.
+``edap:mean+cost``) dispatch to the device-resident NSGA-II engine
+(core/nsga.py) instead: the (P, D) score matrix is non-dominated-sorted
+*inside* the same compiled scan, every seed's rank-0 designs pool into
+the searched Pareto front (run_mo_search_batched /
+_searched_front_block), and the post-hoc ``_pareto_block`` path is kept
+only for the single-objective ``edap_cost`` scenarios it belongs to.
+
 On a multi-device runtime the search axis is sharded over the mesh
 'data' axis (core.distributed.compile_batched_search) when the batch
 divides the device count; the per-call population sharding path
@@ -44,16 +52,17 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..core import (FOUR_PHASES, MultiSearchResult, PLAIN_PHASE,
-                    SearchResult, SearchSpace, WorkloadArrays,
-                    batched_joint_search, joint_search, make_evaluator,
+from ..core import (FOUR_PHASES, MultiMOSearchResult, MultiSearchResult,
+                    PLAIN_PHASE, SearchResult, SearchSpace,
+                    WorkloadArrays, batched_joint_search,
+                    batched_nsga_search, joint_search, make_evaluator,
                     make_objective, nonideal, pack, phase_schedule,
                     plain_ga_search, random_search, search_kernel)
 from ..core.cost_model import HWConstants, evaluate_population
 from ..core.distributed import compile_batched_search, make_sharded_scorer
-from ..core.objectives import (INFEASIBLE_PENALTY, Objective,
-                               per_workload_scores)
-from ..core.pareto import edap_cost_front
+from ..core.objectives import (INFEASIBLE_PENALTY, MultiObjective,
+                               Objective, per_workload_scores)
+from ..core.pareto import edap_cost_front, hypervolume_2d
 from ..core.search_space import TECH_NODES_NM, TECH_32NM_INDEX
 from . import report
 from .scenarios import Scenario
@@ -62,7 +71,8 @@ DEFAULT_OUT_DIR = os.path.join("experiments", "results")
 
 
 def make_scorer(space: SearchSpace, wa: WorkloadArrays,
-                objective: Objective) -> Tuple[Callable, Callable]:
+                objective: Objective, *, n_calib: int = 32,
+                calib_k: int = 256) -> Tuple[Callable, Callable]:
     """(score_fn, evaluator) for host-driven callers.
 
     score_fn: (P, n) genomes -> (P,) scores, sharded over the mesh
@@ -70,15 +80,22 @@ def make_scorer(space: SearchSpace, wa: WorkloadArrays,
     locally-jitted CostMetrics function (capacity filter, final
     metrics — tiny batches, not worth sharding). Objective kind
     ``edap_acc`` composes the batched non-ideality accuracy model
-    (core.nonideal.make_accuracy_model) into the score; that path stays
-    on the local device (accuracy is not threaded through the sharded
-    population scorer — search batching shards at the *search* axis
-    instead, see run_search_batched).
+    (core.nonideal.make_accuracy_model, calibration fidelity from the
+    ``n_calib``/``calib_k`` Scenario fields) into the score; that path
+    stays on the local device (accuracy is not threaded through the
+    sharded population scorer — search batching shards at the *search*
+    axis instead, see run_search_batched). Multi-objective scorers are
+    traced-only: use make_traced_scorer's ``score_vec``.
     """
+    if isinstance(objective, MultiObjective):
+        raise TypeError("make_scorer builds scalar host scorers; "
+                        "multi-objective searches consume "
+                        "make_traced_scorer(...).score_vec")
     evaluator = make_evaluator(space, wa)
     acc_fn = None
     if objective.kind == "edap_acc":
-        acc_fn = jax.jit(nonideal.make_accuracy_model(space, wa))
+        acc_fn = jax.jit(nonideal.make_accuracy_model(
+            space, wa, n_calib=n_calib, calib_k=calib_k))
     n_dev = jax.device_count()
     if n_dev <= 1 or acc_fn is not None:
         def score_fn(genomes):
@@ -116,6 +133,12 @@ class TracedScorer(NamedTuple):
     specific-baseline fan-out never needs a host-loop fallback.
     ``accuracy`` is the batched (P, W) non-ideality model for
     ``edap_acc`` objectives, None otherwise.
+
+    Multi-objective scorers (objectives.MultiObjective) additionally
+    populate ``score_vec`` — the (P, n) -> (P, D) score *matrix* the
+    NSGA-II kernel (core/nsga.py) non-dominated-sorts inside the scan;
+    ``score``/``score_w`` then restrict to the first component (the
+    scalar the report's representative-design metrics use).
     """
     score: Callable                 # (P, n) -> (P,)
     feasible: Callable              # (P, n) -> (P,) bool
@@ -123,26 +146,42 @@ class TracedScorer(NamedTuple):
     feasible_w: Callable            # ((P, n), w) -> (P,) bool
     metrics: Callable               # (P, n) -> CostMetrics
     accuracy: Optional[Callable] = None  # (P, n) -> (P, W)
+    score_vec: Optional[Callable] = None  # (P, n) -> (P, D), MO only
 
 
 def make_traced_scorer(space: SearchSpace, wa: WorkloadArrays,
                        objective: Objective,
-                       constants: HWConstants = HWConstants(),
-                       ) -> TracedScorer:
+                       constants: HWConstants = HWConstants(), *,
+                       n_calib: int = 32,
+                       calib_k: int = 256) -> TracedScorer:
     table = jnp.asarray(space.value_table())
+    is_mo = isinstance(objective, MultiObjective)
+    kinds = objective.kinds if is_mo else (objective.kind,)
+    first = objective.components[0] if is_mo else objective
 
     acc_fn = None
-    if objective.kind == "edap_acc":
-        acc_fn = nonideal.make_accuracy_model(space, wa)
+    if "edap_acc" in kinds:
+        acc_fn = nonideal.make_accuracy_model(space, wa,
+                                              n_calib=n_calib,
+                                              calib_k=calib_k)
 
     def metrics(genomes):
         return evaluate_population(space, wa, genomes, constants, table)
 
-    def score(genomes):
+    def score_full(genomes):
         m = metrics(genomes)
         if acc_fn is None:
             return objective(m)
         return objective(m, accuracy=acc_fn(genomes))
+
+    if is_mo:
+        score_vec = score_full
+
+        def score(genomes):
+            return score_full(genomes)[:, 0]
+    else:
+        score_vec = None
+        score = score_full
 
     def feasible(genomes):
         return metrics(genomes).feasible
@@ -153,14 +192,14 @@ def make_traced_scorer(space: SearchSpace, wa: WorkloadArrays,
     def score_w(genomes, w):
         m = metrics(genomes)
         acc = acc_fn(genomes) if acc_fn is not None else None
-        s = per_workload_scores(m, objective.kind, accuracy=acc)[:, w]
+        s = per_workload_scores(m, first.kind, accuracy=acc)[:, w]
         bad = (~m.feasible_w[:, w]) | (m.area >
-                                       objective.area_constraint)
+                                       first.area_constraint)
         return jnp.where(bad, INFEASIBLE_PENALTY, s)
 
     return TracedScorer(score=score, feasible=feasible, score_w=score_w,
                         feasible_w=feasible_w, metrics=metrics,
-                        accuracy=acc_fn)
+                        accuracy=acc_fn, score_vec=score_vec)
 
 
 def _search_mesh(n_searches: int):
@@ -235,6 +274,28 @@ def run_search_batched(scenario: Scenario, space: SearchSpace,
             wall_time_s=sum(r.wall_time_s for r in rs),
             sampling_time_s=0.0)
     raise ValueError(f"unknown algorithm {scenario.algorithm!r}")
+
+
+def run_mo_search_batched(scenario: Scenario, space: SearchSpace,
+                          traced: TracedScorer,
+                          seeds: List[int]) -> MultiMOSearchResult:
+    """All seeds of a multi-objective scenario's NSGA-II search in one
+    device call — the direct-front counterpart of run_search_batched.
+    The kernel reuses the 4-phase schedule's crossover/mutation
+    parameters; other algorithms have no multi-objective counterpart
+    registered."""
+    if scenario.algorithm != "fourphase":
+        raise ValueError(
+            f"multi-objective scenarios run the NSGA-II engine with the "
+            f"4-phase schedule; algorithm {scenario.algorithm!r} has no "
+            "multi-objective counterpart")
+    b = scenario.budget
+    feas = traced.feasible if scenario.mem == "rram" else None
+    keys = jnp.stack([jax.random.PRNGKey(s) for s in seeds])
+    return batched_nsga_search(
+        keys, space, traced.score_vec, p_h=b.p_h, p_e=b.p_e, p_ga=b.p_ga,
+        generations_per_phase=b.generations, feasible_fn=feas,
+        mesh=_search_mesh(len(seeds)))
 
 
 def _specific_budget(scenario: Scenario):
@@ -361,12 +422,32 @@ def _design_metrics(space: SearchSpace, traced: TracedScorer,
     }
 
 
+def _hv_of(points: np.ndarray) -> Tuple[Optional[float], Optional[List]]:
+    """Standalone hypervolume of a 2-D minimize-front, with the ref
+    point at 1.05 × the per-axis maximum of the candidate cloud (the
+    convention both the searched and post-hoc blocks share so their
+    absolute values are at least roughly comparable; the report layer
+    recomputes both under one *shared* ref for the head-to-head)."""
+    if points.ndim != 2 or points.shape[1] != 2 or points.shape[0] == 0:
+        return None, None
+    ref = 1.05 * np.max(points, axis=0)
+    return hypervolume_2d(points, ref), [float(r) for r in ref]
+
+
+def _tech_nm_of(space: SearchSpace, genome: np.ndarray) -> float:
+    ti = (int(genome[space.index("tech_idx")])
+          if "tech_idx" in space.names else TECH_32NM_INDEX)
+    return float(TECH_NODES_NM[ti])
+
+
 def _pareto_block(space: SearchSpace, traced: TracedScorer,
                   res: MultiSearchResult, objective: Objective) -> Dict:
     """EDAP × fabrication-cost Pareto front over the candidate designs
     the search visited (final populations of every seed) — the Fig. 9
-    construction. EDAP keeps the objective's aggregation but drops the
-    cost factor, so the two front axes are the paper's."""
+    construction, *post hoc*: single-objective pressure chose the
+    candidates, the front is filtered afterwards. EDAP keeps the
+    objective's aggregation but drops the cost factor, so the two
+    front axes are the paper's."""
     cand = np.unique(
         np.asarray(res.populations).reshape(-1, space.n_params), axis=0)
     m = traced.metrics(jnp.asarray(cand))
@@ -377,21 +458,84 @@ def _pareto_block(space: SearchSpace, traced: TracedScorer,
     ok = np.isfinite(edap) & (edap < INFEASIBLE_PENALTY)
     cand, edap, cost = cand[ok], edap[ok], cost[ok]
     idx, e_f, c_f = edap_cost_front(edap, cost)
-    tech_i = (space.index("tech_idx")
-              if "tech_idx" in space.names else None)
     front = []
     for j, e, c in zip(idx, e_f, c_f):
-        ti = (int(cand[j, tech_i]) if tech_i is not None
-              else TECH_32NM_INDEX)
         front.append({"edap": float(e), "cost": float(c),
-                      "tech_nm": float(TECH_NODES_NM[ti]),
+                      "tech_nm": _tech_nm_of(space, cand[j]),
                       "design": space.decode(cand[j])})
+    hv, ref = _hv_of(np.stack([edap, cost], axis=1)
+                     if edap.shape[0] else np.zeros((0, 2)))
     return {
+        "searched": False,
+        "axes": ["edap", "cost"],
         "n_candidates": int(edap.shape[0]),
         "points": [{"edap": float(e), "cost": float(c)}
                    for e, c in zip(edap, cost)],
         "front": front,
+        "hypervolume": hv,
+        "ref_point": ref,
     }
+
+
+def _axis_labels(objective: MultiObjective) -> List[str]:
+    """Unique short labels per component (kind, suffixed on clashes)."""
+    labels, seen = [], {}
+    for o in objective.components:
+        k = o.kind
+        if k in seen:
+            seen[k] += 1
+            k = f"{k}_{seen[o.kind]}"
+        else:
+            seen[k] = 0
+        labels.append(k)
+    return labels
+
+
+def _searched_front_block(space: SearchSpace, traced: TracedScorer,
+                          res: MultiMOSearchResult,
+                          objective: MultiObjective,
+                          ) -> Tuple[Dict, np.ndarray, np.ndarray]:
+    """The *searched* front: rank-0 designs of every seed's final
+    NSGA-II population, pooled and re-filtered to the global
+    non-dominated subset (nsga.MultiMOSearchResult.union_front) — the
+    direct Fig. 9 construction. Points/front carry the objective score
+    matrix the search itself optimized (no re-evaluation), keyed by the
+    component kinds (``edap``/``cost`` for the *_mo scenarios).
+
+    Returns (block, genomes, scores): the feasible front designs and
+    their score matrix ride along so the caller picks the
+    representative design without recomputing the O(N², D) front."""
+    labels = _axis_labels(objective)
+    genomes, scores = res.union_front()
+    ok = np.all(scores < INFEASIBLE_PENALTY, axis=1)
+    genomes, scores = genomes[ok], scores[ok]
+    # every feasible candidate the final populations hold (the scatter
+    # cloud behind the front)
+    d = scores.shape[1] if scores.ndim == 2 else len(labels)
+    all_scores = np.asarray(res.scores).reshape(-1, d)
+    all_scores = all_scores[np.all(all_scores < INFEASIBLE_PENALTY,
+                                   axis=1)]
+    order = np.argsort(scores[:, -1], kind="stable")  # by cost, Fig. 9
+    front = []
+    for j in order:
+        entry = {lab: float(v) for lab, v in zip(labels, scores[j])}
+        entry["tech_nm"] = _tech_nm_of(space, genomes[j])
+        entry["design"] = space.decode(genomes[j])
+        front.append(entry)
+    hv, ref = (_hv_of(all_scores) if d == 2 else (None, None))
+    block = {
+        "searched": True,
+        "axes": labels,
+        "n_candidates": int(all_scores.shape[0]),
+        "points": [{lab: float(v) for lab, v in zip(labels, row)}
+                   for row in all_scores],
+        "front": front,
+        "front_sizes_per_seed": [int(np.sum(res.ranks[s] == 0))
+                                 for s in range(res.n_seeds)],
+        "hypervolume": hv,
+        "ref_point": ref,
+    }
+    return block, genomes, scores
 
 
 def run_scenario(scenario: Scenario,
@@ -413,6 +557,8 @@ def run_scenario(scenario: Scenario,
     n_seeds = scenario.budget.n_seeds if n_seeds is None else n_seeds
     seeds = [seed + j for j in range(n_seeds)]
     budget_dict = dataclasses.asdict(scenario.budget)
+    calib_dict = {"n_calib": scenario.n_calib,
+                  "calib_k": scenario.calib_k}
     sdir = os.path.join(out_dir, scenario.name)
     cache = os.path.join(sdir, "result.json")
     if write and not force and os.path.exists(cache):
@@ -420,10 +566,12 @@ def run_scenario(scenario: Scenario,
             cached = json.load(f)
         if (cached.get("seed") == seed
                 and cached.get("n_seeds", 1) == n_seeds
-                and cached.get("budget") == budget_dict):
-            # budget is part of the cache key: a --smoke run must not
-            # shadow a full-budget result (and vice versa); legacy
-            # results without a budget field recompute once
+                and cached.get("budget") == budget_dict
+                and cached.get("calib") == calib_dict):
+            # budget and calibration fidelity are part of the cache
+            # key: a --smoke run must not shadow a full-budget result,
+            # and an n_calib/calib_k change must re-score (legacy
+            # results without the fields recompute once)
             cached["cached"] = True
             return cached
 
@@ -432,12 +580,24 @@ def run_scenario(scenario: Scenario,
     workloads = scenario.resolve_workloads()
     wa = pack(workloads)
     objective = make_objective(scenario.objective)
-    host_score_fn, evaluator = make_scorer(space, wa, objective)
-    traced = make_traced_scorer(space, wa, objective)
+    is_mo = isinstance(objective, MultiObjective)
+    traced = make_traced_scorer(space, wa, objective,
+                                n_calib=scenario.n_calib,
+                                calib_k=scenario.calib_k)
 
-    res = run_search_batched(scenario, space, traced, seeds,
-                             host_score_fn, evaluator)
-    if float(np.min(res.best_scores)) >= INFEASIBLE_PENALTY:
+    if is_mo:
+        res = run_mo_search_batched(scenario, space, traced, seeds)
+        # per-seed best-so-far minimum of the first objective (the
+        # ideal-point history's last row) — the seeds-block scalar
+        best_scores = res.histories[:, -1, 0]
+    else:
+        host_score_fn, evaluator = make_scorer(
+            space, wa, objective, n_calib=scenario.n_calib,
+            calib_k=scenario.calib_k)
+        res = run_search_batched(scenario, space, traced, seeds,
+                                 host_score_fn, evaluator)
+        best_scores = np.asarray(res.best_scores)
+    if float(np.min(best_scores)) >= INFEASIBLE_PENALTY:
         # the device-resident sampler cannot raise mid-computation the
         # way the host rejection loop did — surface the same condition
         # here instead of silently writing an infeasible design
@@ -446,8 +606,24 @@ def run_scenario(scenario: Scenario,
             "infeasible design — the capacity/area constraints reject "
             "(almost) the whole space; raise the sampling oversample "
             "or shrink the workloads")
-    j_best = int(np.argmin(res.best_scores))
-    best = res.seed_result(j_best)
+    j_best = int(np.argmin(best_scores))
+    if is_mo:
+        pareto_block, genomes, scores = _searched_front_block(
+            space, traced, res, objective)
+        # representative design: the searched-front point minimizing
+        # the first objective (the best-EDAP end of the front)
+        if genomes.shape[0] == 0:
+            raise RuntimeError(
+                f"scenario {scenario.name!r}: the searched front holds "
+                "no feasible design")
+        best_genome = genomes[int(np.argmin(scores[:, 0]))]
+        history = res.histories[j_best, :, 0]
+        histories = res.histories[:, :, 0]
+    else:
+        best = res.seed_result(j_best)
+        best_genome = best.best_genome
+        history = np.asarray(best.history)
+        histories = np.asarray(res.histories)
     result: Dict = {
         "scenario": scenario.name,
         "mem": scenario.mem,
@@ -458,16 +634,24 @@ def run_scenario(scenario: Scenario,
         "seed": seed,
         "n_seeds": n_seeds,
         "budget": budget_dict,
+        "calib": calib_dict,
         "workloads": list(wa.names),
-        "best_score": float(best.best_score),
-        "generalized": _design_metrics(space, traced, best.best_genome,
+        "best_score": float(best_scores[j_best]),
+        "generalized": _design_metrics(space, traced, best_genome,
                                        wa.names),
-        "history": np.asarray(best.history).tolist(),
+        # best seed's best-so-far trajectory (first objective for MO) +
+        # every seed's, for the Fig. 4 convergence bands in summary.md
+        "history": np.asarray(history).tolist(),
+        "histories": np.asarray(histories).tolist(),
         "search_wall_time_s": res.wall_time_s,
-        "sampling_time_s": res.sampling_time_s,
+        "sampling_time_s": getattr(res, "sampling_time_s", 0.0),
         "cached": False,
     }
-    if objective.kind == "edap_cost":
+    if is_mo:
+        # the direct-searched front (Fig. 9 by NSGA-II)
+        result["pareto"] = pareto_block
+        result["history_mo"] = res.histories[j_best].tolist()
+    elif objective.kind == "edap_cost":
         # §IV-I: the EDAP × fabrication-cost trade-off the search
         # explored (Fig. 9's front), from the final populations
         result["pareto"] = _pareto_block(space, traced, res, objective)
@@ -478,7 +662,7 @@ def run_scenario(scenario: Scenario,
     # one batched device call for every GA algorithm and objective
     # kind; only the random-search baseline stays sequential.
     gap_means = None
-    if scenario.specific_baselines and len(workloads) > 1:
+    if scenario.specific_baselines and len(workloads) > 1 and not is_mo:
         use_fanout = (specific_fanout
                       and scenario.algorithm != "random")
         if use_fanout:
@@ -529,8 +713,8 @@ def run_scenario(scenario: Scenario,
                     json.dump(sub, f, indent=1, sort_keys=True,
                               default=float)
 
-    result["seeds"] = report.aggregate_seeds(
-        seeds, np.asarray(res.best_scores), gap_means)
+    result["seeds"] = report.aggregate_seeds(seeds, best_scores,
+                                             gap_means)
     result["wall_time_s"] = time.perf_counter() - t0
     if write:
         report.write_artifacts(result, sdir)

@@ -75,3 +75,10 @@ def test_committed_baseline_gates_search_speedup():
     assert m["accuracy_model_speedup_x"]["higher_is_better"]
     assert m["accuracy_model_speedup_x"]["value"] * 0.7 >= 3.0
     assert "accuracy_model_batched_s" in m
+    # and the NSGA-II scan-vs-host-loop speedup (the multi-objective
+    # tentpole, bench_experiments.experiments_nsga_scan)
+    assert m["nsga_scan_speedup_x"]["gated"]
+    assert m["nsga_scan_speedup_x"]["higher_is_better"]
+    assert m["nsga_scan_speedup_x"]["value"] * 0.7 >= 3.0
+    for name in ("nsga_scan_s", "nsga_host_s"):
+        assert name in m

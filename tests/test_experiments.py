@@ -45,6 +45,12 @@ def test_registry_exposes_paper_grid():
         assert tc.objective.startswith("edap_cost")
         assert tc.tech_variable
         assert "tech_idx" in tc.space().names
+        # §IV-I by direct multi-objective (NSGA-II) search
+        mo = get_scenario(f"{mem}_tech_cost_mo")
+        assert "+" in mo.objective
+        assert mo.tech_variable and not mo.specific_baselines
+        from repro.core.objectives import MultiObjective
+        assert isinstance(make_objective(mo.objective), MultiObjective)
 
 
 def test_every_scenario_resolves():
@@ -223,6 +229,121 @@ def test_tech_cost_scenario_attaches_pareto(tmp_path):
     md = open(os.path.join(str(tmp_path), "tiny_cost",
                            "report.md")).read()
     assert "Pareto front" in md
+
+
+TINY_MO = dataclasses.replace(
+    TINY, name="tiny_mo", objective="edap:mean+cost",
+    tech_variable=True, specific_baselines=False)
+
+
+def test_mo_scenario_runs_device_resident(tmp_path):
+    """A tiny multi-objective scenario end-to-end: NSGA-II inside the
+    compiled search, searched-front pareto block, hypervolume, per-seed
+    front sizes, Fig. 9 direct-search section in the report."""
+    res = run_scenario(TINY_MO, out_dir=str(tmp_path), n_seeds=2)
+    assert res["best_score"] < 1e29
+    p = res["pareto"]
+    assert p["searched"] is True
+    assert p["axes"] == ["edap", "cost"]
+    assert p["n_candidates"] >= len(p["front"]) >= 1
+    assert len(p["front_sizes_per_seed"]) == 2
+    costs = [f["cost"] for f in p["front"]]
+    edaps = [f["edap"] for f in p["front"]]
+    assert costs == sorted(costs)
+    assert edaps == sorted(edaps, reverse=True)  # a real trade-off
+    assert p["hypervolume"] is None or p["hypervolume"] >= 0
+    # the representative (best-EDAP) design is the front's EDAP minimum
+    assert res["best_score"] == pytest.approx(min(edaps), rel=1e-5)
+    # multi-objective histories: scalar first-objective trajectory for
+    # the convergence section + the full (T+1, D) ideal-point one
+    assert len(res["histories"]) == 2
+    hmo = np.asarray(res["history_mo"])
+    assert hmo.ndim == 2 and hmo.shape[1] == 2
+    assert np.all(np.diff(hmo, axis=0) <= 1e-6)
+    md = open(os.path.join(str(tmp_path), "tiny_mo", "report.md")).read()
+    assert "direct search" in md and "Pareto front" in md
+    assert "Hypervolume" in md
+
+
+def test_mo_searched_front_not_dominated_by_posthoc():
+    """Acceptance pin, at the budget the claim is made for: running
+    `rram_tech_cost_mo` at the smoke budget (the CI invocation), its
+    NSGA-II-searched EDAP × cost front contains no point strictly
+    dominated by the post-hoc front of the scalarized `rram_tech_cost`
+    search on the same budget and seeds, and the summary renders the
+    head-to-head comparison. (The guarantee is empirical, not
+    structural — a *severely* under-budgeted NSGA run can keep
+    diverse-but-dominated designs — which is exactly why the nightly
+    CI artifact tracks the comparison.)"""
+    from repro.experiments import SMOKE_BUDGET
+    r_mo = run_scenario(
+        dataclasses.replace(get_scenario("rram_tech_cost_mo"),
+                            budget=SMOKE_BUDGET),
+        write=False, n_seeds=2)
+    r_ph = run_scenario(
+        dataclasses.replace(get_scenario("rram_tech_cost"),
+                            budget=SMOKE_BUDGET, specific_baselines=False),
+        write=False, n_seeds=2)
+    searched = np.asarray([[p["edap"], p["cost"]]
+                           for p in r_mo["pareto"]["front"]])
+    posthoc = np.asarray([[p["edap"], p["cost"]]
+                          for p in r_ph["pareto"]["front"]])
+    for s in searched:
+        dominated = np.any(np.all(posthoc <= s, axis=1)
+                           & np.any(posthoc < s, axis=1))
+        assert not dominated, (s, posthoc)
+    text = render_summary([r_mo, r_ph])
+    assert "Searched vs post-hoc" in text
+    assert "| rram_tech_cost_mo |" in text
+
+
+def test_mo_rejects_non_fourphase():
+    from repro.experiments import run_mo_search_batched
+    sc = dataclasses.replace(TINY_MO, algorithm="plain")
+    with pytest.raises(ValueError, match="NSGA-II"):
+        run_mo_search_batched(sc, sc.space(), None, [0])
+
+
+def test_make_scorer_rejects_multi_objective():
+    from repro.experiments import make_scorer
+    from repro.core import pack, get_workload_set
+    sp = TINY_MO.space()
+    wa = pack(get_workload_set(TINY_MO.workloads))
+    with pytest.raises(TypeError, match="score_vec"):
+        make_scorer(sp, wa, make_objective(TINY_MO.objective))
+
+
+def test_calib_is_part_of_cache_key(tmp_path):
+    """n_calib/calib_k are Scenario fields and cache-key components: a
+    changed calibration fidelity must not be served from the stale
+    cache."""
+    out = str(tmp_path)
+    r1 = run_scenario(TINY, out_dir=out)
+    assert run_scenario(TINY, out_dir=out)["cached"]
+    assert r1["calib"] == {"n_calib": 32, "calib_k": 256}
+    other = dataclasses.replace(TINY, n_calib=8, calib_k=128)
+    r2 = run_scenario(other, out_dir=out)
+    assert not r2["cached"]
+    assert r2["calib"] == {"n_calib": 8, "calib_k": 128}
+
+
+def test_calib_fields_reach_accuracy_model():
+    """The registry's calibration knobs actually change the accuracy
+    model's calibration GEMM (different fidelity -> different scores),
+    while the same knobs reproduce identical scores."""
+    sc = dataclasses.replace(TINY, objective="edap_acc:mean")
+    space = sc.space()
+    wls = sc.resolve_workloads()
+    from repro.core import pack
+    obj = make_objective(sc.objective)
+    g = np.zeros((4, space.n_params), np.int32)
+    a = make_traced_scorer(space, pack(wls), obj, n_calib=8,
+                           calib_k=128).accuracy(g)
+    b = make_traced_scorer(space, pack(wls), obj, n_calib=8,
+                           calib_k=128).accuracy(g)
+    c = make_traced_scorer(space, pack(wls), obj).accuracy(g)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert not np.array_equal(np.asarray(a), np.asarray(c))
 
 
 def test_budget_is_part_of_cache_key(tmp_path):

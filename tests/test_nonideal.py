@@ -146,3 +146,22 @@ def test_accuracy_model_single_workload_column_restriction():
         solo = np.asarray(
             make_accuracy_model(sp, [wls[i]])(jnp.asarray(g)))
         np.testing.assert_allclose(solo[:, 0], full[:, i], rtol=1e-6)
+
+
+def test_accuracy_model_calibration_knobs_match_host_oracle():
+    """Non-default n_calib/calib_k (the Scenario-level fidelity knobs)
+    thread through both the batched model and the host oracle and stay
+    equivalent — smaller calibration GEMMs are a speed/fidelity trade,
+    not a different model."""
+    sp = get_space("rram")
+    wls = get_workload_set(("resnet18", "alexnet"))
+    g = _genomes(sp, 4)
+    kw = dict(n_calib=8, calib_k=128)
+    dev = np.asarray(
+        jax.jit(make_accuracy_model(sp, wls, **kw))(jnp.asarray(g)))
+    host = accuracy_proxy_host(sp, g, wls, **kw)
+    assert dev.shape == (4, 2)
+    np.testing.assert_allclose(dev, host, atol=5e-3)
+    # a different fidelity draws different calibration data
+    dflt = np.asarray(make_accuracy_model(sp, wls)(jnp.asarray(g)))
+    assert not np.array_equal(dev, dflt)

@@ -1,0 +1,308 @@
+"""Device-resident NSGA-II: the traceable non-dominated sort and
+crowding distance pinned against brute-force host oracles (hypothesis
+property tests where installed), scan-vs-host-loop trajectory
+equivalence, batched multi-seed independence, and the union-front
+theorem the runner's searched Fig. 9 block relies on."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (FOUR_PHASES, batched_nsga_search,
+                        crowding_distance, get_space, get_workload_set,
+                        make_evaluator, make_objective, nondominated_rank,
+                        nsga_search, pack, pareto_front, phase_schedule,
+                        run_nsga_loop)
+from repro.core.nsga import crowded_order, nsga_scan, tournament_select
+from repro.core import sampling
+
+try:
+    from hypothesis import given, settings, strategies as st
+    from hypothesis.extra import numpy as hnp
+    HAVE_HYPOTHESIS = True
+except ImportError:  # container without dev deps; CI installs it
+    HAVE_HYPOTHESIS = False
+
+
+# ---------------------------------------------------------------------------
+# host oracles
+# ---------------------------------------------------------------------------
+
+def brute_rank(F: np.ndarray) -> np.ndarray:
+    """Peel non-dominated fronts one by one, pure Python."""
+    F = np.asarray(F, np.float64)
+    n = F.shape[0]
+    ranks = np.full(n, -1, np.int64)
+    remaining = set(range(n))
+    r = 0
+    while remaining:
+        front = [i for i in remaining
+                 if not any(np.all(F[j] <= F[i]) and np.any(F[j] < F[i])
+                            for j in remaining)]
+        for i in front:
+            ranks[i] = r
+        remaining -= set(front)
+        r += 1
+    return ranks
+
+
+def brute_crowding(F: np.ndarray, ranks: np.ndarray) -> np.ndarray:
+    """Deb's per-front crowding, pure Python, float32 arithmetic to
+    match the device kernel bit-for-bit up to summation order."""
+    F = np.asarray(F, np.float32)
+    n, d = F.shape
+    dist = np.zeros(n, np.float32)
+    for r in np.unique(ranks):
+        idx = np.where(ranks == r)[0]
+        for j in range(d):
+            order = idx[np.argsort(F[idx, j], kind="stable")]
+            span = F[order[-1], j] - F[order[0], j]
+            dist[order[0]] = np.inf
+            dist[order[-1]] = np.inf
+            for k in range(1, len(order) - 1):
+                gap = (F[order[k + 1], j] - F[order[k - 1], j]) / \
+                    (span if span > 0 else np.float32(1.0))
+                dist[order[k]] += gap
+    return dist
+
+
+# ---------------------------------------------------------------------------
+# sort + crowding vs oracles
+# ---------------------------------------------------------------------------
+
+def test_rank_toy():
+    F = np.array([[1.0, 5.0], [2.0, 2.0], [5.0, 1.0],  # front 0
+                  [3.0, 3.0],                          # front 1
+                  [6.0, 6.0]])                         # front 2
+    r = np.asarray(nondominated_rank(jnp.asarray(F)))
+    assert list(r) == [0, 0, 0, 1, 2]
+
+
+def test_rank_duplicates_and_single():
+    F = np.array([[1.0, 1.0], [1.0, 1.0], [2.0, 2.0]])
+    r = np.asarray(nondominated_rank(jnp.asarray(F)))
+    assert list(r) == [0, 0, 1]  # duplicates share the front
+    assert list(nondominated_rank(jnp.ones((1, 3)))) == [0]
+
+
+def test_rank_matches_oracle_random_sweep():
+    """Deterministic random sweep (runs even without hypothesis):
+    heavy ties from integer grids, 1-3 objectives."""
+    rng = np.random.default_rng(0)
+    for _ in range(40):
+        n = int(rng.integers(1, 40))
+        d = int(rng.integers(1, 4))
+        F = rng.integers(0, 5, (n, d)).astype(np.float32)
+        np.testing.assert_array_equal(
+            np.asarray(nondominated_rank(jnp.asarray(F))), brute_rank(F))
+
+
+def test_rank_zero_equals_pareto_front():
+    """rank == 0 is exactly core.pareto.pareto_front's survivor set."""
+    rng = np.random.default_rng(3)
+    F = rng.integers(0, 6, (50, 2)).astype(np.float32)
+    r = np.asarray(nondominated_rank(jnp.asarray(F)))
+    np.testing.assert_array_equal(np.nonzero(r == 0)[0], pareto_front(F))
+
+
+def test_crowding_matches_oracle_random_sweep():
+    rng = np.random.default_rng(1)
+    for _ in range(40):
+        n = int(rng.integers(1, 40))
+        d = int(rng.integers(1, 4))
+        F = rng.integers(0, 5, (n, d)).astype(np.float32)
+        ranks = brute_rank(F)
+        dev = np.asarray(crowding_distance(jnp.asarray(F),
+                                           jnp.asarray(ranks)))
+        np.testing.assert_allclose(dev, brute_crowding(F, ranks),
+                                   rtol=1e-5)
+
+
+if HAVE_HYPOTHESIS:
+    # integer grids maximize ties — the adversarial case for both the
+    # peeling loop and the rank-segmented crowding sort
+    _score_arrays = hnp.arrays(
+        np.int64, st.tuples(st.integers(1, 24), st.integers(1, 3)),
+        elements=st.integers(0, 6))
+
+    @settings(max_examples=150, deadline=None)
+    @given(_score_arrays)
+    def test_rank_matches_oracle(F):
+        F = F.astype(np.float32)
+        np.testing.assert_array_equal(
+            np.asarray(nondominated_rank(jnp.asarray(F))), brute_rank(F))
+
+    @settings(max_examples=100, deadline=None)
+    @given(_score_arrays)
+    def test_crowding_matches_oracle(F):
+        F = F.astype(np.float32)
+        ranks = brute_rank(F)
+        dev = np.asarray(crowding_distance(jnp.asarray(F),
+                                           jnp.asarray(ranks)))
+        np.testing.assert_allclose(dev, brute_crowding(F, ranks),
+                                   rtol=1e-5)
+
+    @settings(max_examples=100, deadline=None)
+    @given(_score_arrays)
+    def test_rank_is_consistent(F):
+        """Structural soundness: every design is dominated by some
+        design of the previous rank and by none of its own."""
+        F = F.astype(np.float64)
+        r = np.asarray(nondominated_rank(jnp.asarray(F)))
+        for i in range(F.shape[0]):
+            same = (r == r[i])
+            dom_i = (np.all(F <= F[i], axis=1) & np.any(F < F[i], axis=1))
+            assert not np.any(dom_i & same)
+            if r[i] > 0:
+                assert np.any(dom_i & (r == r[i] - 1))
+else:  # keep the skip visible in reports
+    @pytest.mark.skip(reason="hypothesis not installed")
+    def test_rank_matches_oracle():
+        pass
+
+
+def test_tournament_prefers_rank_then_crowding():
+    ranks = jnp.asarray([0, 1, 0, 2], jnp.int32)
+    crowd = jnp.asarray([1.0, 5.0, 3.0, 9.0])
+    w = np.asarray(tournament_select(jax.random.PRNGKey(0), ranks,
+                                     crowd, 256))
+    # rank-2 (worst) can only appear against itself: it never beats
+    # any other index
+    assert np.mean(w == 3) < 0.2
+    # between the two rank-0 designs, higher crowding (idx 2) wins
+    # every direct encounter, so it appears at least as often
+    assert np.sum(w == 2) >= np.sum(w == 0)
+
+
+def test_crowded_order_sorts_by_rank_then_crowding():
+    ranks = jnp.asarray([1, 0, 0, 1], jnp.int32)
+    crowd = jnp.asarray([2.0, 1.0, 7.0, 3.0])
+    assert list(np.asarray(crowded_order(ranks, crowd))) == [2, 1, 3, 0]
+
+
+# ---------------------------------------------------------------------------
+# the scanned engine
+# ---------------------------------------------------------------------------
+
+def _mo_setup(mem="sram", tech=True):
+    sp = get_space(mem, tech)
+    wa = pack(get_workload_set(("alexnet", "resnet18")))
+    ev = make_evaluator(sp, wa)
+    mo = make_objective("edap:mean+cost")
+
+    def score_vec(g):
+        return mo(ev(g))
+
+    return sp, ev, score_vec
+
+
+def test_nsga_scan_matches_host_loop():
+    """The tentpole equivalence guarantee, multi-objective edition: the
+    scan-compiled NSGA-II and the host-driven loop follow the same
+    trajectory from the same PRNG key and initial population."""
+    sp, ev, score_vec = _mo_setup()
+    init = sampling.random_genomes(jax.random.PRNGKey(7), sp, 12)
+    key = jax.random.PRNGKey(11)
+    cards = jnp.asarray(sp.cardinalities.astype(np.float32))
+    sched = jnp.asarray(phase_schedule(FOUR_PHASES, 2))
+    pop_s, sc_s, rk_s, h_s = [np.asarray(x) for x in
+                              nsga_scan(key, init, cards, sched,
+                                        score_vec)]
+    loop = run_nsga_loop(key, sp, score_vec, init, FOUR_PHASES, 2)
+    np.testing.assert_allclose(h_s, loop.history, rtol=1e-4)
+    np.testing.assert_allclose(sc_s, loop.scores, rtol=1e-4)
+    np.testing.assert_array_equal(pop_s, loop.population)
+    np.testing.assert_array_equal(rk_s, loop.ranks)
+
+
+def test_nsga_ideal_history_monotone():
+    sp, ev, score_vec = _mo_setup()
+    res = nsga_search(jax.random.PRNGKey(2), sp, score_vec, p_h=64,
+                      p_e=32, p_ga=12, generations_per_phase=2)
+    assert res.history.shape[1] == 2
+    assert np.all(np.diff(res.history, axis=0) <= 1e-6)
+
+
+def test_nsga_result_sorted_and_front_consistent():
+    sp, ev, score_vec = _mo_setup()
+    res = nsga_search(jax.random.PRNGKey(3), sp, score_vec, p_h=64,
+                      p_e=32, p_ga=12, generations_per_phase=2)
+    # sorted by (rank asc, crowding desc): ranks non-decreasing, and
+    # the rank-0 prefix is internally non-dominated
+    assert np.all(np.diff(res.ranks) >= 0)
+    g, f = res.front()
+    assert g.shape[0] >= 1
+    np.testing.assert_array_equal(
+        np.asarray(nondominated_rank(jnp.asarray(f))),
+        np.zeros(f.shape[0], np.int64))
+
+
+def test_batched_nsga_matches_single():
+    """vmapped multi-seed NSGA-II: each seed's result equals the same
+    seed run alone (independence of the batch axis)."""
+    sp, ev, score_vec = _mo_setup()
+    kw = dict(p_h=48, p_e=24, p_ga=8, generations_per_phase=2)
+    keys = jnp.stack([jax.random.PRNGKey(s) for s in (0, 1, 2)])
+    mr = batched_nsga_search(keys, sp, score_vec, **kw)
+    assert mr.n_seeds == 3
+    for i in (0, 2):
+        single = nsga_search(keys[i], sp, score_vec, **kw)
+        np.testing.assert_allclose(mr.scores[i], single.scores,
+                                   rtol=1e-4)
+        np.testing.assert_array_equal(mr.populations[i],
+                                      single.population)
+
+
+def test_union_front_equals_global_pareto():
+    """The searched-front construction theorem: pooling per-seed rank-0
+    designs and re-filtering equals the Pareto front over ALL final-
+    population candidates (what the post-hoc construction would compute
+    on the same candidate set) — so no searched-front point can be
+    dominated by any visited final design."""
+    sp, ev, score_vec = _mo_setup()
+    keys = jnp.stack([jax.random.PRNGKey(s) for s in range(3)])
+    mr = batched_nsga_search(keys, sp, score_vec, p_h=48, p_e=24,
+                             p_ga=8, generations_per_phase=2)
+    _, front_scores = mr.union_front()
+    all_scores = mr.scores.reshape(-1, 2)
+    # as point sets: union front == pareto(all candidates)
+    want = {tuple(p) for p in all_scores[pareto_front(all_scores)]}
+    got = {tuple(p) for p in front_scores}
+    assert got == want
+
+
+def test_nsga_front_spans_cost_tradeoff():
+    """The direct search's raison d'être: with EDAP × cost objectives
+    on a variable-technology space, the front holds designs trading the
+    two off (more than one distinct cost level) — not a single
+    scalarized optimum."""
+    sp, ev, score_vec = _mo_setup()
+    res = nsga_search(jax.random.PRNGKey(0), sp, score_vec, p_h=96,
+                      p_e=48, p_ga=16, generations_per_phase=3)
+    g, f = res.front()
+    assert np.unique(np.round(f[:, 1], 6)).size >= 2, f
+    # and the front is feasible
+    assert np.all(f < 1e29)
+
+
+def test_nsga_rram_capacity_masking():
+    """RRAM with the traceable feasibility mask: the whole NSGA-II
+    search stays on device and still lands on feasible designs."""
+    sp = get_space("rram", True)
+    wa = pack(get_workload_set(("alexnet", "resnet18")))
+    ev = make_evaluator(sp, wa)
+    mo = make_objective("edap:mean+cost")
+
+    def score_vec(g):
+        return mo(ev(g))
+
+    def feasible_fn(g):
+        return ev(g).feasible
+
+    res = nsga_search(jax.random.PRNGKey(0), sp, score_vec, p_h=96,
+                      p_e=48, p_ga=12, generations_per_phase=2,
+                      feasible_fn=feasible_fn)
+    g, f = res.front()
+    assert np.all(f < 1e29)
+    m = ev(jnp.asarray(g))
+    assert np.all(np.asarray(m.feasible))

@@ -1,10 +1,12 @@
 """Vectorized Pareto front vs a brute-force oracle: toy cases, a
 deterministic random sweep, and (when hypothesis is installed — CI
-does) shrinking property tests."""
+does) shrinking property tests; plus the 2-D hypervolume and coverage
+metrics the searched-vs-post-hoc front comparison reports."""
 import numpy as np
 import pytest
 
-from repro.core.pareto import edap_cost_front, pareto_front
+from repro.core.pareto import (edap_cost_front, front_coverage,
+                               hypervolume_2d, pareto_front)
 
 try:
     from hypothesis import given, settings, strategies as st
@@ -89,6 +91,71 @@ else:  # keep the skip visible in reports
     @pytest.mark.skip(reason="hypothesis not installed")
     def test_pareto_front_matches_brute_force():
         pass
+
+
+def brute_hypervolume(pts: np.ndarray, ref: np.ndarray,
+                      grid: int = 200) -> float:
+    """Monte-Carlo-free oracle: rasterize the dominated region on a
+    grid over [min, ref] and sum cell areas."""
+    pts = np.asarray(pts, float)
+    lo = np.minimum(pts.min(axis=0), ref) - 1e-9
+    xs = np.linspace(lo[0], ref[0], grid, endpoint=False)
+    ys = np.linspace(lo[1], ref[1], grid, endpoint=False)
+    dx = (ref[0] - lo[0]) / grid
+    dy = (ref[1] - lo[1]) / grid
+    cx = xs + dx / 2
+    cy = ys + dy / 2
+    dominated = np.zeros((grid, grid), bool)
+    for p in pts:
+        dominated |= (cx[:, None] >= p[0]) & (cy[None, :] >= p[1])
+    return float(np.sum(dominated) * dx * dy)
+
+
+def test_hypervolume_toy():
+    # one point: the rectangle to the ref corner
+    assert hypervolume_2d(np.array([[1.0, 1.0]]),
+                          np.array([3.0, 4.0])) == pytest.approx(6.0)
+    # an L of two points: union of rectangles, overlap not double-counted
+    pts = np.array([[1.0, 2.0], [2.0, 1.0]])
+    ref = np.array([3.0, 3.0])
+    assert hypervolume_2d(pts, ref) == pytest.approx(3.0)
+    # dominated + out-of-ref points contribute nothing
+    pts2 = np.vstack([pts, [[2.5, 2.5], [10.0, 0.5]]])
+    assert hypervolume_2d(pts2, ref) == pytest.approx(3.0)
+    # empty / fully out of range
+    assert hypervolume_2d(np.zeros((0, 2)), ref) == 0.0
+    assert hypervolume_2d(np.array([[5.0, 5.0]]), ref) == 0.0
+
+
+def test_hypervolume_matches_raster_oracle():
+    rng = np.random.default_rng(0)
+    for _ in range(20):
+        n = int(rng.integers(1, 12))
+        pts = rng.uniform(0, 1, (n, 2))
+        ref = np.array([1.1, 1.1])
+        hv = hypervolume_2d(pts, ref)
+        assert hv == pytest.approx(brute_hypervolume(pts, ref, 400),
+                                   abs=0.02)
+        # monotone: adding any point never shrinks the hypervolume
+        extra = np.vstack([pts, rng.uniform(0, 1, (1, 2))])
+        assert hypervolume_2d(extra, ref) >= hv - 1e-12
+
+
+def test_hypervolume_duplicate_x_ties():
+    """Points sharing an x coordinate: only the lower y matters."""
+    pts = np.array([[1.0, 2.0], [1.0, 1.0]])
+    assert hypervolume_2d(pts, np.array([2.0, 3.0])) == \
+        pytest.approx(2.0)
+
+
+def test_front_coverage():
+    a = np.array([[1.0, 1.0]])
+    b = np.array([[2.0, 2.0], [0.5, 3.0], [1.0, 1.0]])
+    # a covers (2,2) and the equal point, not (0.5, 3)
+    assert front_coverage(a, b) == pytest.approx(2.0 / 3.0)
+    assert front_coverage(b, a) == pytest.approx(1.0)  # via the equal pt
+    assert front_coverage(np.zeros((0, 2)), b) == 0.0
+    assert front_coverage(a, np.zeros((0, 2))) == 0.0
 
 
 def test_edap_cost_front_sorted_by_cost():
