@@ -15,6 +15,13 @@ Cells:
                              perf gate pins (benchmarks/baseline.json).
   experiments_multiseed    — S independent seeds as ONE vmapped device
                              call vs S sequential scan searches.
+  experiments_baselines_scan — the Table 3 baseline engine: one
+                             scan-compiled (µ+λ)-ES search
+                             (core/baselines.py) vs the host-driven
+                             per-iteration reference loop on the
+                             §III-C1 reduced-space landscape; the
+                             scan-vs-host speedup is gated like the
+                             GA/NSGA cells.
   experiments_nsga_scan    — the multi-objective tentpole: one full
                              smoke-budget NSGA-II search (non-dominated
                              sorting, crowding, tournament and
@@ -303,6 +310,52 @@ def experiments_accuracy_scored(pop: int = 64, host_pop: int = 8,
             gated=False)
 
 
+def experiments_baselines_scan(iters: int = 12, pop: int = 24,
+                               timed: int = 8) -> None:
+    """Table 3 baseline engine: one scan-compiled (µ+λ)-ES search vs
+    the host-driven per-iteration loop (core.baselines.run_baseline_
+    loop — the same init/step closures, one Python round-trip per
+    iteration), on the §III-C1 reduced-space EDAP landscape. Equal
+    work both sides, steady state (jits warmed before timing); the
+    gated metric is the dimensionless scan-vs-host speedup, like the
+    GA/NSGA cells."""
+    from repro.core import pack as pack_w, reduced_rram_space
+    from repro.core import get_workload_set, PAPER_4
+    from repro.core.baselines import baseline_search, run_baseline_loop
+    from repro.experiments import make_landscape_scorer
+
+    space = reduced_rram_space()
+    wa = pack_w(get_workload_set(PAPER_4))
+    score = make_landscape_scorer(space, wa, make_objective("edap:mean"))
+
+    kw = dict(algorithm="es", pop=pop, iters=iters)
+    baseline_search(jax.random.PRNGKey(0), space, score, **kw)  # compile
+    t0 = time.perf_counter()
+    for i in range(timed):
+        out = baseline_search(jax.random.PRNGKey(i), space, score, **kw)
+    t_scan = (time.perf_counter() - t0) / timed
+
+    run_baseline_loop(jax.random.PRNGKey(0), space, score, **kw)  # warm
+    t0 = time.perf_counter()
+    for i in range(timed):
+        out = run_baseline_loop(jax.random.PRNGKey(i), space, score,
+                                **kw)
+    t_host = (time.perf_counter() - t0) / timed
+    del out
+
+    speedup = t_host / t_scan
+    Bench.record("experiments_baselines_scan", t_scan,
+                 f"es_pop{pop}_T{iters}")
+    Bench.record("experiments_baselines_hostloop", t_host,
+                 f"baselines_scan_speedup_{speedup:.1f}x")
+    _metric("baselines_scan_s", t_scan, higher_is_better=False,
+            gated=False)
+    _metric("baselines_host_s", t_host, higher_is_better=False,
+            gated=False)
+    _metric("baselines_scan_speedup_x", speedup, higher_is_better=True,
+            gated=True)
+
+
 def experiments_smoke_run() -> None:
     t0 = time.perf_counter()
     res = run_scenario(get_scenario("rram_smoke"), write=False)
@@ -317,6 +370,7 @@ def experiments_runner() -> None:
     experiments_search_loop()
     experiments_multiseed()
     experiments_nsga_scan()
+    experiments_baselines_scan()
     experiments_accuracy_scored()
     experiments_smoke_run()
 
@@ -335,6 +389,7 @@ def main(argv: Optional[list] = None) -> int:
         experiments_search_loop()
         experiments_multiseed()
         experiments_nsga_scan()
+        experiments_baselines_scan()
         experiments_accuracy_scored()
         experiments_smoke_run()
     else:

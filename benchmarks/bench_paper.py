@@ -23,7 +23,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import (Objective, PAPER_4, PAPER_9,
-                        get_workload_set, pack)
+                        get_workload_set)
 from repro.core.nonideal import make_accuracy_model
 from repro.core.objectives import per_workload_scores
 from repro.core.pareto import edap_cost_front
@@ -358,49 +358,26 @@ def table6_runtime():
 
 def table3_algorithms():
     """Table 3 / §III-C1: GA vs PSO/ES/SRES/CMA-ES/G3PCX on the reduced
-    RRAM space with exhaustive ground truth (240 designs)."""
-    import itertools
-    from repro.core import reduced_rram_space
-    from repro.core.baselines import (cmaes_search, es_search,
-                                      g3pcx_search, pso_search)
-    from repro.core.genetic import plain_ga_search
-    t0 = time.perf_counter()
-    sp = reduced_rram_space()
-    wa = pack(get_workload_set(PAPER_4))
-    from repro.core import make_evaluator as _mk
-    ev = _mk(sp, wa)
-    # pure EDAP landscape (no feasibility wall) — see tests/test_baselines
-    def score_fn(g):
-        return per_workload_scores(ev(g), "edap").mean(axis=1)
-    combos = np.asarray(list(itertools.product(
-        *[range(len(v)) for v in sp.values])), np.int32)
-    scores = np.asarray(score_fn(jnp.asarray(combos)))
-    gmin = float(scores[scores < 1e29].min())
+    RRAM space with exhaustive ground truth (240 designs).
 
-    out = {"global_min": gmin, "space_size": int(sp.size), "algorithms": {}}
-    runs = {
-        "GA": lambda k: plain_ga_search(k, sp, score_fn, p_ga=24,
-                                        total_generations=40),
-        "ES": lambda k: es_search(k, sp, score_fn, iters=40),
-        "SRES": lambda k: es_search(k, sp, score_fn, iters=40,
-                                    stochastic_ranking=True),
-        "PSO": lambda k: pso_search(k, sp, score_fn, iters=40),
-        "CMA-ES": lambda k: cmaes_search(k, sp, score_fn, iters=40),
-        "G3PCX": lambda k: g3pcx_search(k, sp, score_fn, iters=40),
+    Delegates to the registered ``table3_reduced_rram`` scenario — the
+    device-resident baseline engine (core/baselines.py) with all seeds
+    of each algorithm in one batched scan-compiled device call, and
+    the runner's exhaustive-enumeration block (which raises a clear
+    error instead of crashing on an all-infeasible space)."""
+    from repro.experiments import get_scenario, run_scenario
+    t0 = time.perf_counter()
+    res = run_scenario(get_scenario("table3_reduced_rram"), write=False)
+    out = {
+        "global_min": res["ground_truth"]["global_min"],
+        "space_size": res["space_size"],
+        "algorithms": {
+            name: {"global_min_hits": a["hit_rate"],
+                   "mean_best": a["mean_best"],
+                   "mean_time_s": a["mean_wall_time_s"]}
+            for name, a in res["algorithms"].items()
+        },
     }
-    for name, fn in runs.items():
-        hits, times, bests = 0, [], []
-        for seed in range(5):
-            t1 = time.perf_counter()
-            r = fn(jax.random.PRNGKey(seed))
-            times.append(time.perf_counter() - t1)
-            bests.append(float(r.best_score))
-            hits += int(r.best_score <= gmin * 1.0001)
-        out["algorithms"][name] = {
-            "global_min_hits": f"{hits}/5",
-            "mean_best": float(np.mean(bests)),
-            "mean_time_s": float(np.mean(times)),
-        }
     _save("table3_algorithms", out)
     summary = "_".join(f"{k}{v['global_min_hits'].split('/')[0]}"
                        for k, v in out["algorithms"].items())

@@ -24,6 +24,12 @@ from .nsga import (MOSearchResult, MultiMOSearchResult,
                    batched_nsga_search, crowding_distance,
                    nondominated_rank, nsga_scan, nsga_search,
                    nsga_search_kernel, run_nsga_loop)
+from .baselines import (BASELINE_ALGORITHMS, BaselineResult,
+                        MultiBaselineResult, baseline_kernel,
+                        baseline_scan, baseline_search,
+                        batched_baseline_search, cmaes_search,
+                        es_search, g3pcx_search, pso_search,
+                        run_baseline_loop, stochastic_rank)
 from .pareto import (edap_cost_front, front_coverage, hypervolume_2d,
                      pareto_front)
-from . import nonideal, nsga, pareto, distributed
+from . import baselines, nonideal, nsga, pareto, distributed

@@ -1,25 +1,84 @@
-"""Baseline optimizers for the algorithm-selection study (paper §III-C1,
-Table 3): PSO, (µ+λ)-ES, stochastic-ranking ES (SRES), CMA-ES and G3PCX,
-all operating on the real-coded relaxation of the discrete genome used
-by genetic.py (index -> (i+0.5)/cardinality).
+"""Device-resident baseline optimizers for the algorithm-selection
+study (paper §III-C1, Table 3): PSO, (µ+λ)-ES, SRES, CMA-ES and G3PCX,
+all on the real-coded relaxation of the discrete genome used by
+genetic.py (index -> (i+0.5)/cardinality, decode by floor).
 
-The paper evaluates these on a REDUCED RRAM space (Xbar_rows, Xbar_cols,
-C_per_tile, Bits_cell) small enough to enumerate exhaustively, and asks
-which algorithms reach the global minimum (Table 3: GA/ES/SRES do; PSO
-and G3PCX stall in local minima; CMA-ES fails to converge).
-benchmarks/bench_paper.py:table3_algorithms reruns that protocol.
+The engine is built in the style of core/genetic.py / core/nsga.py:
+every algorithm is a pair of pure traceable closures (``init``,
+``step``) bundled as a :class:`BaselineOps`, and one search — init +
+every iteration — folds into a single jit-compiled ``lax.scan``
+(``baseline_scan`` / ``baseline_kernel``) with zero host transfers
+between iterations. Independent seeds batch along a ``vmap`` axis
+(``batched_baseline_search`` via core.distributed.compile_batched_
+search, mesh-shardable exactly like the GA/NSGA-II kernels).
+``run_baseline_loop`` keeps a host-driven per-iteration loop — the
+*same* init/step closures, one Python round-trip per iteration — as
+the pinned equivalence oracle (tests/test_baselines.py) and the
+measured baseline of the ``baselines_scan`` benchmark cell.
+
+Scorer contract: identical to the GA's — ``score_fn`` maps (P, n)
+int32 genomes to (P,) f32 scores (lower = better, finite
+``INFEASIBLE_PENALTY`` for infeasible designs) and must be pure
+traceable JAX. SRES additionally consumes a *penalty channel*
+``penalty_fn`` ((P, n) genomes -> (P,) >= 0, 0 = feasible) for
+Runarsson & Yao stochastic ranking; when none is given the penalty is
+derived from the scorer's own infeasibility marker (score >=
+INFEASIBLE_PENALTY).
+
+Algorithm notes (the §III-C1 fidelity fixes):
+
+  * **CMA-ES** — minimal rank-µ update. The deviations feeding the
+    covariance update are taken around the *old* mean (kept before the
+    mean update), as CMA-ES defines them; the previous implementation
+    centered on the already-updated mean, which silently dropped the
+    mean-shift component from the covariance estimate.
+  * **SRES** — true Runarsson & Yao stochastic ranking: a bubble sort
+    over (objective, penalty) where each adjacent comparison uses the
+    objective when both designs are feasible or with probability
+    ``p_f``, and the penalty otherwise (``stochastic_rank``). The
+    previous implementation noise-perturbed an argsort, which is not
+    the algorithm.
+  * **G3PCX** — actual parent-centric crossover [Deb et al., 2002]:
+    offspring are distributed around the best parent with variance
+    ``sigma_zeta`` along the best-to-centroid direction and variance
+    ``sigma_eta · D̄`` in the orthogonal complement, where ``D̄`` is
+    the mean perpendicular distance of the *other* parents to that
+    direction — so the non-best parents shape the search distribution.
+    The companion-parent draw excludes the best index (the previous
+    draw could duplicate it, collapsing the centroid). G3 replacement:
+    two random population slots compete with the offspring pool.
 """
 from __future__ import annotations
 
 import time
-from typing import Callable, NamedTuple
+from typing import Callable, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .genetic import _to_index
+from .genetic import _cached_jit, _to_index
+from .objectives import INFEASIBLE_PENALTY
 from .search_space import SearchSpace
+
+BASELINE_ALGORITHMS = ("pso", "es", "sres", "cmaes", "g3pcx")
+
+
+class BaselineOps(NamedTuple):
+    """One baseline algorithm as pure traceable closures.
+
+    ``init``: key -> state (a pytree of arrays; scores its initial
+    population so ``best`` is meaningful immediately); ``step``:
+    (key, state) -> state, one iteration; ``best``: state ->
+    (x_real (n,), score) — the best-so-far design in real coding.
+    ``evals_init``/``evals_per_iter`` are the analytic evaluation
+    counts (budget bookkeeping for the Table 3 rows).
+    """
+    init: Callable
+    step: Callable
+    best: Callable
+    evals_init: int
+    evals_per_iter: int
 
 
 class BaselineResult(NamedTuple):
@@ -27,152 +86,539 @@ class BaselineResult(NamedTuple):
     best_score: float
     evaluations: int
     wall_time_s: float
+    history: Optional[np.ndarray] = None   # (iters+1,) best-so-far
 
 
-def _decode(x, cards):
-    return _to_index(jnp.clip(x, 0.0, 1.0 - 1e-6), cards)
+class MultiBaselineResult(NamedTuple):
+    """S independent baseline searches executed as one batched device
+    call (vmap over the seed axis) — the Table 3 hit-rate statistics
+    come straight off the leading axis."""
+    best_genomes: np.ndarray     # (S, n_params)
+    best_scores: np.ndarray      # (S,)
+    histories: np.ndarray        # (S, iters+1)
+    evaluations: int             # per search
+    wall_time_s: float           # whole batch
+
+    @property
+    def n_seeds(self) -> int:
+        return int(self.best_scores.shape[0])
+
+    def seed_result(self, i: int) -> BaselineResult:
+        return BaselineResult(best_genome=self.best_genomes[i],
+                              best_score=float(self.best_scores[i]),
+                              evaluations=self.evaluations,
+                              wall_time_s=self.wall_time_s,
+                              history=self.histories[i])
+
+    def best(self) -> BaselineResult:
+        return self.seed_result(int(np.argmin(self.best_scores)))
 
 
-def _score_real(score_fn, x, cards):
-    return np.asarray(score_fn(_decode(jnp.asarray(x), cards)))
+def _real_scorer(score_fn: Callable, cards: jax.Array) -> Callable:
+    def score(x):
+        return score_fn(_to_index(x, cards))
+    return score
 
 
-def pso_search(key, space: SearchSpace, score_fn: Callable, n_particles=24,
-               iters=40, w=0.7, c1=1.5, c2=1.5) -> BaselineResult:
-    t0 = time.perf_counter()
-    cards = jnp.asarray(space.cardinalities.astype(np.float32))
-    rng = np.random.default_rng(int(jax.random.randint(key, (), 0, 2**31 - 1)))
-    x = rng.random((n_particles, space.n_params)).astype(np.float32)
-    v = (rng.random(x.shape).astype(np.float32) - 0.5) * 0.2
-    s = _score_real(score_fn, x, cards)
-    pbest_x, pbest_s = x.copy(), s.copy()
-    g = int(np.argmin(s))
-    gbest_x, gbest_s = x[g].copy(), float(s[g])
-    evals = n_particles
-    for _ in range(iters):
-        r1 = rng.random(x.shape).astype(np.float32)
-        r2 = rng.random(x.shape).astype(np.float32)
-        v = (w * v + c1 * r1 * (pbest_x - x) + c2 * r2 * (gbest_x - x))
-        x = np.clip(x + v, 0.0, 1.0 - 1e-6)
-        s = _score_real(score_fn, x, cards)
-        evals += n_particles
-        imp = s < pbest_s
-        pbest_x[imp], pbest_s[imp] = x[imp], s[imp]
-        g = int(np.argmin(pbest_s))
-        if pbest_s[g] < gbest_s:
-            gbest_x, gbest_s = pbest_x[g].copy(), float(pbest_s[g])
-    genome = np.asarray(_decode(jnp.asarray(gbest_x[None]), cards))[0]
-    return BaselineResult(genome, gbest_s, evals, time.perf_counter() - t0)
+# ---------------------------------------------------------------------------
+# PSO
+# ---------------------------------------------------------------------------
+
+def pso_ops(cards: jax.Array, score_fn: Callable, n_particles: int,
+            w: float = 0.7, c1: float = 1.5, c2: float = 1.5,
+            ) -> BaselineOps:
+    """Global-best PSO with inertia ``w`` and cognitive/social pulls."""
+    n = cards.shape[0]
+    score = _real_scorer(score_fn, cards)
+
+    def init(key):
+        k_x, k_v = jax.random.split(key)
+        x = jax.random.uniform(k_x, (n_particles, n))
+        v = (jax.random.uniform(k_v, (n_particles, n)) - 0.5) * 0.2
+        s = score(x)
+        g = jnp.argmin(s)
+        return dict(x=x, v=v, pb_x=x, pb_s=s, gb_x=x[g], gb_s=s[g])
+
+    def step(key, st):
+        k1, k2 = jax.random.split(key)
+        r1 = jax.random.uniform(k1, st["x"].shape)
+        r2 = jax.random.uniform(k2, st["x"].shape)
+        v = (w * st["v"] + c1 * r1 * (st["pb_x"] - st["x"])
+             + c2 * r2 * (st["gb_x"][None, :] - st["x"]))
+        x = jnp.clip(st["x"] + v, 0.0, 1.0 - 1e-6)
+        s = score(x)
+        imp = s < st["pb_s"]
+        pb_x = jnp.where(imp[:, None], x, st["pb_x"])
+        pb_s = jnp.where(imp, s, st["pb_s"])
+        g = jnp.argmin(pb_s)
+        better = pb_s[g] < st["gb_s"]
+        gb_x = jnp.where(better, pb_x[g], st["gb_x"])
+        gb_s = jnp.where(better, pb_s[g], st["gb_s"])
+        return dict(x=x, v=v, pb_x=pb_x, pb_s=pb_s, gb_x=gb_x, gb_s=gb_s)
+
+    def best(st):
+        return st["gb_x"], st["gb_s"]
+
+    return BaselineOps(init, step, best, n_particles, n_particles)
 
 
-def es_search(key, space: SearchSpace, score_fn: Callable, mu=8, lam=24,
-              iters=40, sigma0=0.3, stochastic_ranking=False,
-              ) -> BaselineResult:
-    """(µ+λ)-ES with self-adaptive step size; stochastic_ranking=True
-    gives the SRES flavor (rank perturbation, Runarsson & Yao)."""
-    t0 = time.perf_counter()
-    cards = jnp.asarray(space.cardinalities.astype(np.float32))
-    rng = np.random.default_rng(int(jax.random.randint(key, (), 0, 2**31 - 1)))
-    pop = rng.random((mu, space.n_params)).astype(np.float32)
-    sig = np.full(mu, sigma0, np.float32)
-    s = _score_real(score_fn, pop, cards)
-    evals = mu
-    tau = 1.0 / np.sqrt(2 * space.n_params)
-    for _ in range(iters):
-        parents = rng.integers(0, mu, lam)
-        child_sig = sig[parents] * np.exp(tau * rng.standard_normal(lam)
-                                          ).astype(np.float32)
-        children = np.clip(
-            pop[parents] + child_sig[:, None]
-            * rng.standard_normal((lam, space.n_params)).astype(np.float32),
+# ---------------------------------------------------------------------------
+# (µ+λ)-ES and SRES
+# ---------------------------------------------------------------------------
+
+def stochastic_rank(key: jax.Array, f: jax.Array, phi: jax.Array,
+                    p_f: float = 0.45) -> jax.Array:
+    """Runarsson & Yao stochastic ranking: (N,) permutation, best first.
+
+    A traceable bubble sort over (objective ``f``, penalty ``phi``):
+    each adjacent comparison uses the objective when both designs are
+    feasible (``phi <= 0``) or, otherwise, with probability ``p_f``;
+    the penalty governs the rest. ``p_f < 0.5`` biases survival toward
+    feasibility while still letting good-objective infeasible designs
+    percolate. N full sweeps (the canonical algorithm stops early on a
+    swap-free sweep; a fixed sweep count is the traceable equivalent
+    and sorts every reachable order completely). With all-zero
+    penalties every comparison is an objective comparison, so the
+    result equals a stable objective sort for ANY ``p_f`` —
+    tests/test_baselines.py pins that property with hypothesis.
+    """
+    n = f.shape[0]
+    u = jax.random.uniform(key, (n, n - 1))
+
+    def sweep(i, perm):
+        def comp(j, perm):
+            a, b = perm[j], perm[j + 1]
+            both_feasible = (phi[a] <= 0.0) & (phi[b] <= 0.0)
+            use_obj = both_feasible | (u[i, j] < p_f)
+            swap = jnp.where(use_obj, f[a] > f[b], phi[a] > phi[b])
+            return (perm.at[j].set(jnp.where(swap, b, a))
+                        .at[j + 1].set(jnp.where(swap, a, b)))
+        return jax.lax.fori_loop(0, n - 1, comp, perm)
+
+    return jax.lax.fori_loop(0, n, sweep, jnp.arange(n))
+
+
+def es_ops(cards: jax.Array, score_fn: Callable, mu: int, lam: int,
+           sigma0: float = 0.3, stochastic_ranking: bool = False,
+           p_f: float = 0.45,
+           penalty_fn: Optional[Callable] = None) -> BaselineOps:
+    """(µ+λ)-ES with self-adaptive per-individual step size;
+    ``stochastic_ranking=True`` gives the SRES flavor: survival is
+    governed by ``stochastic_rank`` over (objective, penalty) instead
+    of a plain objective sort. The penalty channel is ``penalty_fn``
+    when given, else derived from the scorer's infeasibility marker.
+    Penalties are evaluated once per individual (on the fresh children
+    only) and carried through survival alongside the scores, so the
+    penalty channel never re-scores the surviving parents.
+    """
+    n = cards.shape[0]
+    tau = 1.0 / np.sqrt(2.0 * n)
+
+    def evaluate(x):
+        """(score, penalty) of a real-coded batch, one decode."""
+        genomes = _to_index(x, cards)
+        s = score_fn(genomes)
+        if penalty_fn is not None:
+            # score_fn and penalty_fn run on the SAME genomes array in
+            # one trace, so a penalty channel built from the scorer's
+            # own metrics (runner.make_infeasibility_penalty) CSEs
+            # with the score's cost-model pass instead of doubling it
+            return s, penalty_fn(genomes)
+        return s, jnp.where(s >= INFEASIBLE_PENALTY, 1.0, 0.0)
+
+    def init(key):
+        pop = jax.random.uniform(key, (mu, n))
+        s, phi = evaluate(pop)
+        b = jnp.argmin(s)
+        return dict(pop=pop, sig=jnp.full((mu,), sigma0, jnp.float32),
+                    s=s, phi=phi, best_x=pop[b], best_s=s[b])
+
+    def step(key, st):
+        k_p, k_t, k_z, k_r = jax.random.split(key, 4)
+        parents = jax.random.randint(k_p, (lam,), 0, mu)
+        child_sig = st["sig"][parents] * jnp.exp(
+            tau * jax.random.normal(k_t, (lam,)))
+        children = jnp.clip(
+            st["pop"][parents]
+            + child_sig[:, None] * jax.random.normal(k_z, (lam, n)),
             0.0, 1.0 - 1e-6)
-        cs = _score_real(score_fn, children, cards)
-        evals += lam
-        all_x = np.concatenate([pop, children])
-        all_sig = np.concatenate([sig, child_sig])
-        all_s = np.concatenate([s, cs])
+        cs, cphi = evaluate(children)
+        all_x = jnp.concatenate([st["pop"], children], axis=0)
+        all_sig = jnp.concatenate([st["sig"], child_sig])
+        all_s = jnp.concatenate([st["s"], cs])
+        all_phi = jnp.concatenate([st["phi"], cphi])
         if stochastic_ranking:
-            # bubble-sort with probabilistic swaps on near-ties
-            order = np.argsort(all_s + 0.02 * np.abs(all_s)
-                               * rng.standard_normal(all_s.shape))
+            order = stochastic_rank(k_r, all_s, all_phi, p_f)
         else:
-            order = np.argsort(all_s)
+            order = jnp.argsort(all_s)
         keep = order[:mu]
-        pop, sig, s = all_x[keep], all_sig[keep], all_s[keep]
-    b = int(np.argmin(s))
-    genome = np.asarray(_decode(jnp.asarray(pop[b][None]), cards))[0]
-    return BaselineResult(genome, float(s[b]), evals,
-                          time.perf_counter() - t0)
+        b = jnp.argmin(cs)
+        better = cs[b] < st["best_s"]
+        return dict(pop=all_x[keep], sig=all_sig[keep], s=all_s[keep],
+                    phi=all_phi[keep],
+                    best_x=jnp.where(better, children[b], st["best_x"]),
+                    best_s=jnp.where(better, cs[b], st["best_s"]))
+
+    def best(st):
+        return st["best_x"], st["best_s"]
+
+    return BaselineOps(init, step, best, mu, lam)
 
 
-def cmaes_search(key, space: SearchSpace, score_fn: Callable, lam=24,
-                 iters=40, sigma0=0.3) -> BaselineResult:
-    """Minimal CMA-ES (rank-mu update, no evolution paths)."""
-    t0 = time.perf_counter()
-    n = space.n_params
-    cards = jnp.asarray(space.cardinalities.astype(np.float32))
-    rng = np.random.default_rng(int(jax.random.randint(key, (), 0, 2**31 - 1)))
-    mean = np.full(n, 0.5, np.float64)
-    sigma = sigma0
-    C = np.eye(n)
-    mu = lam // 2
-    wts = np.log(mu + 0.5) - np.log(np.arange(1, mu + 1))
-    wts /= wts.sum()
-    best_s, best_x = np.inf, mean.copy()
-    evals = 0
-    for _ in range(iters):
-        try:
-            A = np.linalg.cholesky(C + 1e-10 * np.eye(n))
-        except np.linalg.LinAlgError:
-            A = np.eye(n)
-        z = rng.standard_normal((lam, n))
-        x = np.clip(mean + sigma * z @ A.T, 0.0, 1.0 - 1e-6)
-        s = _score_real(score_fn, x.astype(np.float32), cards)
-        evals += lam
-        order = np.argsort(s)
-        if s[order[0]] < best_s:
-            best_s, best_x = float(s[order[0]]), x[order[0]].copy()
+# ---------------------------------------------------------------------------
+# CMA-ES (minimal rank-µ update)
+# ---------------------------------------------------------------------------
+
+def cmaes_ops(cards: jax.Array, score_fn: Callable, lam: int,
+              sigma0: float = 0.3) -> BaselineOps:
+    """Minimal CMA-ES: rank-µ covariance update (no evolution paths),
+    log-linear recombination weights, norm-based step-size control.
+
+    The covariance deviations ``y`` are centered on the mean *before*
+    the recombination update — the defining CMA-ES construction; the
+    regression test in tests/test_baselines.py pins a quadratic bowl
+    the old after-update centering fails on.
+    """
+    n = cards.shape[0]
+    mu = max(1, lam // 2)
+    w = np.log(mu + 0.5) - np.log(np.arange(1, mu + 1))
+    wts = jnp.asarray((w / w.sum()).astype(np.float32))
+    score = _real_scorer(score_fn, cards)
+    eye = jnp.eye(n, dtype=jnp.float32)
+
+    def init(key):
+        del key
+        mean = jnp.full((n,), 0.5, jnp.float32)
+        s0 = score(mean[None])[0]
+        return dict(mean=mean, sigma=jnp.float32(sigma0), C=eye,
+                    best_x=mean, best_s=s0)
+
+    def step(key, st):
+        # C stays a convex combination of PSD terms + jitter, so the
+        # Cholesky is well-defined inside the trace (no host fallback)
+        A = jnp.linalg.cholesky(st["C"] + 1e-6 * eye)
+        z = jax.random.normal(key, (lam, n))
+        x = jnp.clip(st["mean"][None] + st["sigma"] * (z @ A.T),
+                     0.0, 1.0 - 1e-6)
+        s = score(x)
+        order = jnp.argsort(s)
+        b = order[0]
+        better = s[b] < st["best_s"]
+        best_x = jnp.where(better, x[b], st["best_x"])
+        best_s = jnp.where(better, s[b], st["best_s"])
         sel = x[order[:mu]]
+        old_mean = st["mean"]
         mean = wts @ sel
-        y = (sel - mean) / max(sigma, 1e-12)
-        C = 0.7 * C + 0.3 * (y.T * wts) @ y
-        sigma *= np.exp(0.1 * (np.linalg.norm(z[order[0]]) / np.sqrt(n)
-                               - 1.0))
-        sigma = float(np.clip(sigma, 1e-4, 1.0))
-    genome = np.asarray(_decode(jnp.asarray(
-        best_x[None].astype(np.float32)), cards))[0]
-    return BaselineResult(genome, best_s, evals, time.perf_counter() - t0)
+        y = (sel - old_mean[None]) / jnp.maximum(st["sigma"], 1e-12)
+        C = 0.7 * st["C"] + 0.3 * (y.T * wts) @ y
+        sigma = st["sigma"] * jnp.exp(
+            0.1 * (jnp.linalg.norm(z[b]) / np.sqrt(n) - 1.0))
+        sigma = jnp.clip(sigma, 1e-4, 1.0)
+        return dict(mean=mean, sigma=sigma, C=C, best_x=best_x,
+                    best_s=best_s)
+
+    def best(st):
+        return st["best_x"], st["best_s"]
+
+    return BaselineOps(init, step, best, 1, lam)
 
 
-def g3pcx_search(key, space: SearchSpace, score_fn: Callable, pop_size=24,
-                 iters=40, n_parents=3, n_offspring=2) -> BaselineResult:
-    """G3 model with a simplified parent-centric crossover (Deb et al.)."""
+# ---------------------------------------------------------------------------
+# G3PCX
+# ---------------------------------------------------------------------------
+
+def companion_indices(key: jax.Array, pop_size: int, n_companions: int,
+                      best: jax.Array) -> jax.Array:
+    """``n_companions`` distinct population indices, uniformly drawn
+    WITHOUT replacement and never equal to ``best``: a draw over
+    [0, pop_size-1) shifted past the best index. (The previous draw
+    sampled the full range and could duplicate the best parent,
+    collapsing the PCX centroid.)"""
+    idx = jax.random.choice(key, pop_size - 1, (n_companions,),
+                            replace=False)
+    return idx + (idx >= best)
+
+
+def pcx_offspring(key: jax.Array, p: jax.Array, companions: jax.Array,
+                  n_offspring: int, sigma_zeta: float = 0.1,
+                  sigma_eta: float = 0.1) -> jax.Array:
+    """Parent-centric crossover around the best parent ``p``.
+
+    d = p - centroid(parents) is the principal direction; offspring =
+    p + zeta·d + D̄·z_perp with zeta ~ N(0, sigma_zeta²), z_perp the
+    projection of z ~ N(0, sigma_eta² I) onto the complement of d
+    (an isotropic Gaussian restricted to the orthogonal subspace), and
+    D̄ the mean perpendicular distance of the companion parents to the
+    d-axis — the term that makes the *other* parents shape the search
+    distribution. D̄ is floored at 1e-3 so a population collapsed onto
+    the axis keeps a minimal orthogonal exploration instead of
+    freezing.
+    """
+    n = p.shape[0]
+    k_zeta, k_eta = jax.random.split(key)
+    g = jnp.concatenate([p[None], companions], axis=0).mean(axis=0)
+    d = p - g
+    dn = jnp.linalg.norm(d)
+    d_hat = d / jnp.maximum(dn, 1e-12)
+    diff = companions - p[None]
+    perp = diff - (diff @ d_hat)[:, None] * d_hat[None]
+    dbar = jnp.maximum(jnp.mean(jnp.linalg.norm(perp, axis=1)), 1e-3)
+    zeta = sigma_zeta * jax.random.normal(k_zeta, (n_offspring, 1))
+    z = sigma_eta * jax.random.normal(k_eta, (n_offspring, n))
+    z_perp = z - (z @ d_hat)[:, None] * d_hat[None]
+    return p[None] + zeta * d[None] + dbar * z_perp
+
+
+def g3pcx_ops(cards: jax.Array, score_fn: Callable, pop_size: int,
+              n_parents: int = 3, n_offspring: int = 2,
+              sigma_zeta: float = 0.1,
+              sigma_eta: float = 0.1) -> BaselineOps:
+    """G3 (generalized generation gap) model with parent-centric
+    crossover: each iteration recombines the best parent with
+    ``n_parents - 1`` distinct companions (never the best itself),
+    then lets 2 random population members compete with the offspring
+    pool for their slots (steady-state replacement)."""
+    n = cards.shape[0]
+    score = _real_scorer(score_fn, cards)
+
+    def init(key):
+        pop = jax.random.uniform(key, (pop_size, n))
+        s = score(pop)
+        b = jnp.argmin(s)
+        return dict(pop=pop, s=s, best_x=pop[b], best_s=s[b])
+
+    def step(key, st):
+        k_c, k_x, k_r = jax.random.split(key, 3)
+        bi = jnp.argmin(st["s"])
+        comp = companion_indices(k_c, pop_size, n_parents - 1, bi)
+        kids = jnp.clip(
+            pcx_offspring(k_x, st["pop"][bi], st["pop"][comp],
+                          n_offspring, sigma_zeta, sigma_eta),
+            0.0, 1.0 - 1e-6)
+        ks = score(kids)
+        slots = jax.random.choice(k_r, pop_size, (2,), replace=False)
+        pool_x = jnp.concatenate([st["pop"][slots], kids], axis=0)
+        pool_s = jnp.concatenate([st["s"][slots], ks])
+        order = jnp.argsort(pool_s)
+        pop = st["pop"].at[slots].set(pool_x[order[:2]])
+        s = st["s"].at[slots].set(pool_s[order[:2]])
+        b = jnp.argmin(ks)
+        better = ks[b] < st["best_s"]
+        return dict(pop=pop, s=s,
+                    best_x=jnp.where(better, kids[b], st["best_x"]),
+                    best_s=jnp.where(better, ks[b], st["best_s"]))
+
+    def best(st):
+        return st["best_x"], st["best_s"]
+
+    return BaselineOps(init, step, best, pop_size, n_offspring)
+
+
+# ---------------------------------------------------------------------------
+# the scanned engine + host-loop oracle
+# ---------------------------------------------------------------------------
+
+def make_baseline_ops(algorithm: str, cards: jax.Array,
+                      score_fn: Callable, pop: int,
+                      penalty_fn: Optional[Callable] = None,
+                      **hyper) -> BaselineOps:
+    """Map a (algorithm, population-scale) budget onto the algorithm's
+    own sizing: PSO swarm / ES offspring / CMA-ES sample / G3PCX
+    population of ``pop``."""
+    if algorithm == "pso":
+        return pso_ops(cards, score_fn, n_particles=pop, **hyper)
+    if algorithm == "es":
+        mu = hyper.pop("mu", max(2, pop // 3))
+        return es_ops(cards, score_fn, mu=mu, lam=pop, **hyper)
+    if algorithm == "sres":
+        mu = hyper.pop("mu", max(2, pop // 3))
+        return es_ops(cards, score_fn, mu=mu, lam=pop,
+                      stochastic_ranking=True, penalty_fn=penalty_fn,
+                      **hyper)
+    if algorithm == "cmaes":
+        return cmaes_ops(cards, score_fn, lam=pop, **hyper)
+    if algorithm == "g3pcx":
+        return g3pcx_ops(cards, score_fn, pop_size=pop, **hyper)
+    raise ValueError(f"unknown baseline algorithm {algorithm!r}; "
+                     f"known: {BASELINE_ALGORITHMS}")
+
+
+def baseline_scan(key: jax.Array, ops: BaselineOps, iters: int,
+                  ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Traceable search: init + ``iters`` steps in ONE lax.scan.
+
+    Returns device arrays (best_x_real (n,), best_score, history
+    (iters+1,) best-so-far). vmap over ``key`` to batch seeds.
+    """
+    key, k0 = jax.random.split(key)
+    state = ops.init(k0)
+    s_init = ops.best(state)[1]
+
+    def body(carry, _):
+        key, st = carry
+        key, k = jax.random.split(key)
+        st = ops.step(k, st)
+        return (key, st), ops.best(st)[1]
+
+    (_, state), hist = jax.lax.scan(body, (key, state), None,
+                                    length=iters)
+    bx, bs = ops.best(state)
+    return bx, bs, jnp.concatenate([s_init[None], hist])
+
+
+def baseline_kernel(key: jax.Array, cards: jax.Array,
+                    score_fn: Callable, *, algorithm: str, pop: int,
+                    iters: int, penalty_fn: Optional[Callable] = None,
+                    **hyper) -> Tuple[jax.Array, ...]:
+    """search_kernel's baseline sibling: one traceable computation
+    from PRNG key to (best_genome int32, best_score, history)."""
+    ops = make_baseline_ops(algorithm, cards, score_fn, pop,
+                            penalty_fn=penalty_fn, **hyper)
+    bx, bs, hist = baseline_scan(key, ops, iters)
+    return _to_index(bx[None], cards)[0], bs, hist
+
+
+def n_evaluations(algorithm: str, pop: int, iters: int,
+                  **hyper) -> int:
+    """Analytic evaluation budget of one search (Table 3 bookkeeping)."""
+    cards = jnp.ones((1,), jnp.float32)  # sizing only; never traced
+    ops = make_baseline_ops(algorithm, cards, lambda g: None, pop,
+                            **hyper)
+    return ops.evals_init + iters * ops.evals_per_iter
+
+
+def _hyper_key(hyper: dict) -> tuple:
+    return tuple(sorted(hyper.items()))
+
+
+def run_baseline_loop(key: jax.Array, space: SearchSpace,
+                      score_fn: Callable, algorithm: str,
+                      pop: int = 24, iters: int = 40,
+                      penalty_fn: Optional[Callable] = None,
+                      **hyper) -> BaselineResult:
+    """Reference host-driven loop: the SAME init/step closures as the
+    scan, one Python round-trip (best-score sync) per iteration — the
+    equivalence oracle for ``baseline_scan`` and the measured host
+    side of the ``baselines_scan`` benchmark cell."""
     t0 = time.perf_counter()
     cards = jnp.asarray(space.cardinalities.astype(np.float32))
-    rng = np.random.default_rng(int(jax.random.randint(key, (), 0, 2**31 - 1)))
-    pop = rng.random((pop_size, space.n_params)).astype(np.float32)
-    s = _score_real(score_fn, pop, cards).copy()
-    evals = pop_size
+    ops = make_baseline_ops(algorithm, cards, score_fn, pop,
+                            penalty_fn=penalty_fn, **hyper)
+    ck = ("baseline_loop", algorithm, id(space), id(score_fn),
+          id(penalty_fn), pop, _hyper_key(hyper))
+    init_j, step_j = _cached_jit(
+        ck, lambda: (jax.jit(ops.init), jax.jit(ops.step)),
+        space, score_fn, penalty_fn)
+    key, k0 = jax.random.split(key)
+    state = init_j(k0)
+    hist = [float(ops.best(state)[1])]
     for _ in range(iters):
-        best = int(np.argmin(s))
-        idx = rng.choice(pop_size, n_parents - 1, replace=False)
-        parents = np.concatenate([pop[best][None], pop[idx]])
-        centroid = parents.mean(axis=0)
-        kids = []
-        for _ in range(n_offspring):
-            d = pop[best] - centroid
-            noise = 0.1 * rng.standard_normal(space.n_params)
-            kids.append(np.clip(pop[best] + 0.5 * d + noise, 0.0,
-                                1.0 - 1e-6).astype(np.float32))
-        kids = np.stack(kids)
-        ks = _score_real(score_fn, kids, cards)
-        evals += n_offspring
-        # replace two random members if improved
-        repl = rng.choice(pop_size, n_offspring, replace=False)
-        for r, kx, kv in zip(repl, kids, ks):
-            if kv < s[r]:
-                pop[r], s[r] = kx, kv
-    b = int(np.argmin(s))
-    genome = np.asarray(_decode(jnp.asarray(pop[b][None]), cards))[0]
-    return BaselineResult(genome, float(s[b]), evals,
-                          time.perf_counter() - t0)
+        key, k = jax.random.split(key)
+        state = step_j(k, state)
+        hist.append(float(ops.best(state)[1]))
+    bx, bs = ops.best(state)
+    genome = np.asarray(_to_index(bx[None], cards))[0]
+    return BaselineResult(
+        best_genome=genome, best_score=float(bs),
+        evaluations=ops.evals_init + iters * ops.evals_per_iter,
+        wall_time_s=time.perf_counter() - t0,
+        history=np.asarray(hist))
+
+
+def batched_baseline_search(keys: jax.Array, space: SearchSpace,
+                            score_fn: Callable, algorithm: str,
+                            pop: int = 24, iters: int = 40,
+                            penalty_fn: Optional[Callable] = None,
+                            mesh=None, **hyper) -> MultiBaselineResult:
+    """S independent baseline searches in one compiled device call.
+
+    Mirrors genetic.batched_joint_search: jit(vmap(baseline_kernel))
+    over the (S, key) batch, compiled kernels cached per (algorithm,
+    scorer, budget), the seed axis sharded over the mesh 'data' axis
+    when given (core.distributed.compile_batched_search)."""
+    t0 = time.perf_counter()
+    cards = jnp.asarray(space.cardinalities.astype(np.float32))
+
+    def one(key):
+        return baseline_kernel(key, cards, score_fn,
+                               algorithm=algorithm, pop=pop,
+                               iters=iters, penalty_fn=penalty_fn,
+                               **hyper)
+
+    from .distributed import compile_batched_search
+    fn = _cached_jit(
+        ("baseline_batched", algorithm, id(space), id(score_fn),
+         id(penalty_fn), id(mesh), pop, iters, _hyper_key(hyper)),
+        lambda: compile_batched_search(one, mesh=mesh),
+        space, score_fn, penalty_fn, mesh)
+    best_g, best_s, hists = fn(keys)
+    return MultiBaselineResult(
+        best_genomes=np.asarray(best_g),
+        best_scores=np.asarray(best_s),
+        histories=np.asarray(hists),
+        evaluations=n_evaluations(algorithm, pop, iters, **hyper),
+        wall_time_s=time.perf_counter() - t0)
+
+
+def baseline_search(key: jax.Array, space: SearchSpace,
+                    score_fn: Callable, algorithm: str, pop: int = 24,
+                    iters: int = 40, use_scan: bool = True,
+                    penalty_fn: Optional[Callable] = None,
+                    **hyper) -> BaselineResult:
+    """One baseline search. Default: the whole search is one
+    jit-compiled lax.scan (a single-seed batched call);
+    ``use_scan=False`` runs the host-driven reference loop."""
+    if not use_scan:
+        return run_baseline_loop(key, space, score_fn, algorithm,
+                                 pop=pop, iters=iters,
+                                 penalty_fn=penalty_fn, **hyper)
+    res = batched_baseline_search(key[None], space, score_fn, algorithm,
+                                  pop=pop, iters=iters,
+                                  penalty_fn=penalty_fn, **hyper)
+    return res.seed_result(0)
+
+
+# ---------------------------------------------------------------------------
+# per-algorithm entry points (Table 3 call sites, back-compat names)
+# ---------------------------------------------------------------------------
+
+def pso_search(key, space: SearchSpace, score_fn: Callable,
+               n_particles: int = 24, iters: int = 40, w: float = 0.7,
+               c1: float = 1.5, c2: float = 1.5,
+               use_scan: bool = True) -> BaselineResult:
+    return baseline_search(key, space, score_fn, "pso", pop=n_particles,
+                           iters=iters, use_scan=use_scan, w=w, c1=c1,
+                           c2=c2)
+
+
+def es_search(key, space: SearchSpace, score_fn: Callable, mu: int = 8,
+              lam: int = 24, iters: int = 40, sigma0: float = 0.3,
+              stochastic_ranking: bool = False, p_f: float = 0.45,
+              penalty_fn: Optional[Callable] = None,
+              use_scan: bool = True) -> BaselineResult:
+    """(µ+λ)-ES; ``stochastic_ranking=True`` gives SRES."""
+    if stochastic_ranking:
+        return baseline_search(key, space, score_fn, "sres", pop=lam,
+                               iters=iters, use_scan=use_scan, mu=mu,
+                               sigma0=sigma0, p_f=p_f,
+                               penalty_fn=penalty_fn)
+    return baseline_search(key, space, score_fn, "es", pop=lam,
+                           iters=iters, use_scan=use_scan, mu=mu,
+                           sigma0=sigma0)
+
+
+def cmaes_search(key, space: SearchSpace, score_fn: Callable,
+                 lam: int = 24, iters: int = 40, sigma0: float = 0.3,
+                 use_scan: bool = True) -> BaselineResult:
+    return baseline_search(key, space, score_fn, "cmaes", pop=lam,
+                           iters=iters, use_scan=use_scan,
+                           sigma0=sigma0)
+
+
+def g3pcx_search(key, space: SearchSpace, score_fn: Callable,
+                 pop_size: int = 24, iters: int = 40,
+                 n_parents: int = 3, n_offspring: int = 2,
+                 use_scan: bool = True) -> BaselineResult:
+    return baseline_search(key, space, score_fn, "g3pcx", pop=pop_size,
+                           iters=iters, use_scan=use_scan,
+                           n_parents=n_parents, n_offspring=n_offspring)

@@ -43,6 +43,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from .search_space import SearchSpace
+# The compiled-kernel cache is shared by every search engine (GA,
+# NSGA-II, the Table 3 baseline optimizers) and lives with the other
+# compilation/distribution machinery in core.distributed.
+from .distributed import cached_compile as _cached_jit
 from . import sampling
 
 
@@ -222,23 +226,6 @@ def search_kernel(key: jax.Array, cards: jax.Array, schedule: jax.Array,
                                               oversample=oversample)
         init = pool[:p_ga]
     return ga_scan(key, init, cards, schedule, score_fn)
-
-
-# Compiled search kernels cached per (closure identity, static knobs):
-# re-running the same search setup (e.g. the sequential specific-
-# baseline fallback looping seeds) must not re-trace the whole scanned
-# GA. Values pin the closures so id() keys stay valid; growth is
-# bounded by the number of distinct scorer closures, same order as the
-# per-scenario jitted evaluators.
-_KERNEL_CACHE: dict = {}
-
-
-def _cached_jit(key, builder, *refs):
-    entry = _KERNEL_CACHE.get(key)
-    if entry is None:
-        entry = (builder(), refs)
-        _KERNEL_CACHE[key] = entry
-    return entry[0]
 
 
 class SearchResult(NamedTuple):

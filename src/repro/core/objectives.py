@@ -49,6 +49,15 @@ def _agg(x, scheme: str):
     raise ValueError(scheme)
 
 
+def aggregate_scores(per_workload: jnp.ndarray, scheme: str) -> jnp.ndarray:
+    """Aggregate a (P, W) per-workload score matrix over the workload
+    axis (§IV-C schemes: max/mean/all) — the same reduction Objective
+    applies, exposed for callers that build *unpenalized* landscape
+    scores (the §III-C1 algorithm-comparison runner probes the raw
+    multi-modal utilization landscape, not constraint handling)."""
+    return _agg(per_workload, scheme)
+
+
 @dataclasses.dataclass(frozen=True)
 class Objective:
     """kind: edap | edp | energy | delay | area | cost | edap_cost |

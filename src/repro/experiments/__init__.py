@@ -8,11 +8,15 @@ layer that reproduce the paper's EDAP tables end-to-end.
 from .scenarios import (Budget, DEFAULT_BUDGET, REGISTRY, SMOKE_BUDGET,
                         Scenario, get_scenario, paper_table_scenarios,
                         scenario_names)
-from .runner import (DEFAULT_OUT_DIR, make_scorer, make_traced_scorer,
+from .runner import (DEFAULT_OUT_DIR, enumerate_ground_truth,
+                     make_infeasibility_penalty, make_landscape_scorer,
+                     make_scorer, make_traced_scorer, run_alg_compare,
                      run_mo_search_batched, run_scenario, run_search,
                      run_search_batched, run_specific_fanout,
                      run_specific_sequential)
 from .report import (aggregate_seeds, baseline_reductions, compute_gap,
                      load_results, render_convergence,
                      render_front_comparison, render_markdown,
-                     render_summary, write_artifacts, write_summary)
+                     render_summary, render_table3,
+                     render_table3_markdown, write_artifacts,
+                     write_summary)

@@ -21,7 +21,7 @@ import os
 import sys
 
 from . import report, runner
-from .scenarios import REGISTRY, SMOKE_BUDGET, get_scenario
+from .scenarios import REGISTRY, get_scenario
 
 
 def cmd_list(args) -> int:
@@ -56,11 +56,21 @@ def cmd_run(args) -> int:
     for name in names:
         sc = get_scenario(name)
         if args.smoke:
-            sc = dataclasses.replace(sc, budget=SMOKE_BUDGET)
+            # scenario-specific smoke budget: the Table 3 study keeps
+            # its >= 5 seeds (hit rates) even at smoke scale
+            sc = dataclasses.replace(sc, budget=sc.smoke_budget)
         res = runner.run_scenario(sc, out_dir=args.out, force=args.force,
                                   seed=args.seed, n_seeds=args.seeds)
         tag = "cached" if res.get("cached") else \
             f"{res['wall_time_s']:.1f}s"
+        if res.get("algorithm") == "alg_compare":
+            hits = ", ".join(f"{n} {a['hit_rate']}"
+                             for n, a in res["algorithms"].items())
+            print(f"[{tag}] {name}: best {res['objective']} score "
+                  f"{res['best_score']:.4g} by "
+                  f"{res['best_algorithm']}; hits: {hits}")
+            print(f"  -> {args.out}/{name}/result.json (+ report.md)")
+            continue
         gap = res.get("gap", {}).get("mean_pct")
         gap_s = f", mean gap {gap:.1f}%" if gap is not None else ""
         seeds = res.get("seeds")
@@ -125,9 +135,9 @@ def main(argv=None) -> int:
     p.add_argument("--force", action="store_true",
                    help="ignore cached results")
     p.add_argument("--smoke", action="store_true",
-                   help="run with the tiny SMOKE_BUDGET (CI / quick "
-                        "checks); the budget is part of the cache key, "
-                        "so smoke results never shadow full runs")
+                   help="run with the scenario's smoke budget (CI / "
+                        "quick checks); the budget is part of the cache "
+                        "key, so smoke results never shadow full runs")
     p.set_defaults(fn=cmd_run)
 
     p = sub.add_parser("report", help="aggregate results into summary.md")

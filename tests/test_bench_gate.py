@@ -82,3 +82,12 @@ def test_committed_baseline_gates_search_speedup():
     assert m["nsga_scan_speedup_x"]["value"] * 0.7 >= 3.0
     for name in ("nsga_scan_s", "nsga_host_s"):
         assert name in m
+    # and the Table 3 baseline engine's scan-vs-host-loop speedup
+    # (bench_experiments.experiments_baselines_scan; the reduced-space
+    # evaluation is tiny so the pinned floor is lower than the
+    # full-space cells', but it must still prove the scan wins)
+    assert m["baselines_scan_speedup_x"]["gated"]
+    assert m["baselines_scan_speedup_x"]["higher_is_better"]
+    assert m["baselines_scan_speedup_x"]["value"] * 0.7 >= 1.0
+    for name in ("baselines_scan_s", "baselines_host_s"):
+        assert name in m

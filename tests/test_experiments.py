@@ -51,6 +51,16 @@ def test_registry_exposes_paper_grid():
         assert mo.tech_variable and not mo.specific_baselines
         from repro.core.objectives import MultiObjective
         assert isinstance(make_objective(mo.objective), MultiObjective)
+    # Table 3 / §III-C1 algorithm-comparison scenarios
+    t3 = get_scenario("table3_reduced_rram")
+    assert t3.algorithm == "alg_compare" and t3.reduced_space
+    assert t3.space().size == 240
+    assert t3.budget.n_seeds >= 5
+    assert t3.smoke_budget.n_seeds >= 5  # hit rates need seeds even in CI
+    full = get_scenario("alg_compare_rram")
+    assert full.algorithm == "alg_compare" and not full.reduced_space
+    assert full.space().size > 240
+    assert full.budget.n_seeds >= 5 and full.smoke_budget.n_seeds >= 5
 
 
 def test_every_scenario_resolves():
@@ -62,7 +72,8 @@ def test_every_scenario_resolves():
         assert len(wls) == len(sc.workloads)
         assert all(w.n_layers > 0 for w in wls)
         make_objective(sc.objective)  # parses
-        assert sc.algorithm in ("fourphase", "plain", "random")
+        from repro.experiments.scenarios import ALGORITHMS
+        assert sc.algorithm in ALGORITHMS
         assert sc.budget.n_evaluations > 0
 
 
@@ -434,6 +445,51 @@ def test_summary_pairs_baselines():
     md = render_summary(results)
     assert md.count("| rram_small_set") == 3
     assert "| 50 |" in md and "| 75 |" in md
+
+
+def _canned_table3(name="table3_reduced_rram"):
+    algs = {}
+    for i, a in enumerate(("GA", "PSO", "ES", "SRES", "CMA-ES",
+                           "G3PCX")):
+        algs[a] = {"hits": 5 - i % 3, "n_seeds": 5, "n_feasible": 5,
+                   "hit_rate": f"{5 - i % 3}/5",
+                   "best_scores": [100.0 + i] * 5,
+                   "mean_best": 100.0 + i, "std_best": 0.0,
+                   "best_score": 100.0 + i,
+                   "best_design": {"xbar_rows": 256.0},
+                   "mean_wall_time_s": 0.1, "evaluations": 1000}
+    return {"scenario": name, "mem": "rram", "algorithm": "alg_compare",
+            "objective": "edap:mean", "paper_ref": "Table 3 / §III-C1",
+            "description": "canned", "seed": 0, "n_seeds": 5,
+            "workloads": ["wl"], "space_size": 240,
+            "seeds": {"count": 5, "list": [0, 1, 2, 3, 4]},
+            "ground_truth": {"exhaustive": True, "global_min": 100.0,
+                             "n_enumerated": 240,
+                             "global_design": {},
+                             "criterion": "x"},
+            "algorithms": algs, "best_algorithm": "GA",
+            "best_score": 100.0, "wall_time_s": 1.0, "cached": False}
+
+
+def test_summary_renders_table3_section():
+    """alg_compare results render in the dedicated Table 3 section (in
+    canonical row order) and are skipped by the main scenario table."""
+    from repro.experiments import render_markdown
+    results = [_canned("rram_small_set", "fourphase", 25.0),
+               _canned_table3()]
+    md = render_summary(results)
+    assert "Algorithm comparison (Table 3" in md
+    assert "table3_reduced_rram" in md
+    # canonical row order survives the sorted-keys JSON round-trip
+    order = [md.index(f"| {a} |") for a in
+             ("GA", "PSO", "ES", "SRES", "CMA-ES", "G3PCX")]
+    assert order == sorted(order)
+    # not a row of the main scenario table
+    main = md.split("## Algorithm comparison")[0]
+    assert "table3_reduced_rram" not in main
+    # per-scenario report renders the Table 3 layout
+    md_one = render_markdown(_canned_table3())
+    assert "global-min hits" in md_one and "| G3PCX |" in md_one
 
 
 # ---------------------------------------------------------------------------
