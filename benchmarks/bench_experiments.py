@@ -37,6 +37,12 @@ Cells:
                              retained host per-genome loop at
                              population scale (gated speedup), plus
                              the scan-compiled edap_acc smoke search.
+  experiments_joint_eval   — the joint co-search hot path: the traced
+                             workload builder + cost model evaluating
+                             a population of (hardware, architecture)
+                             genomes in one device call vs dispatching
+                             the same jitted evaluator per design
+                             (gated batching speedup).
   experiments_smoke_run    — wall time of a full tiny scenario
                              (search + specific-baseline fan-out +
                              report), write=False so only compute is
@@ -356,6 +362,47 @@ def experiments_baselines_scan(iters: int = 12, pop: int = 24,
             gated=True)
 
 
+def experiments_joint_eval(pop: int = 64, iters: int = 5) -> None:
+    """Joint co-search hot path: the traced workload builder + cost
+    model evaluating a whole population's (hardware, architecture)
+    genomes in ONE device call, vs dispatching the same jitted
+    evaluator once per design (the host-driven pattern a
+    non-vectorized builder forces — identical math, P batch-1 calls).
+    The gated metric is the dimensionless batching speedup."""
+    from repro.core import get_space, joint_space, make_joint_evaluator
+    from repro.core.workloads import make_workload_builder, resnet_family
+
+    fam = resnet_family()
+    space = joint_space(get_space("rram"), [fam])
+    builder = make_workload_builder(space, [fam])
+    ev = make_joint_evaluator(space, builder)
+    g = random_genomes(jax.random.PRNGKey(0), space, pop)
+
+    jax.block_until_ready(ev(g))          # compile (P,)
+    jax.block_until_ready(ev(g[:1]))      # compile (1,)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = ev(g)
+    jax.block_until_ready(out)
+    t_batch = (time.perf_counter() - t0) / iters
+
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        for i in range(pop):
+            out = ev(g[i:i + 1])
+    jax.block_until_ready(out)
+    t_per_design = (time.perf_counter() - t0) / iters
+
+    speedup = t_per_design / t_batch
+    Bench.record("experiments_joint_eval", t_batch,
+                 f"pop{pop}_arch{fam.n_combos}_"
+                 f"per_design_{speedup:.1f}x")
+    _metric("joint_eval_batched_s", t_batch, higher_is_better=False,
+            gated=False)
+    _metric("joint_eval_speedup_x", speedup, higher_is_better=True,
+            gated=True)
+
+
 def experiments_smoke_run() -> None:
     t0 = time.perf_counter()
     res = run_scenario(get_scenario("rram_smoke"), write=False)
@@ -372,6 +419,7 @@ def experiments_runner() -> None:
     experiments_nsga_scan()
     experiments_baselines_scan()
     experiments_accuracy_scored()
+    experiments_joint_eval()
     experiments_smoke_run()
 
 
@@ -391,6 +439,7 @@ def main(argv: Optional[list] = None) -> int:
         experiments_nsga_scan()
         experiments_baselines_scan()
         experiments_accuracy_scored()
+        experiments_joint_eval()
         experiments_smoke_run()
     else:
         experiments_runner()

@@ -2,10 +2,11 @@
 accelerators — search space, vectorized cost model, objectives,
 Hamming-distance sampling, the 4-phase GA, non-idealities, and the
 distributed (mesh-sharded) population evaluator."""
-from .search_space import (SearchSpace, get_space, rram_space, sram_space,
-                           reduced_rram_space)
+from .search_space import (SearchSpace, get_space, joint_space, rram_space,
+                           sram_space, reduced_rram_space)
 from .cost_model import (CostMetrics, HWConstants, evaluate_population,
-                         make_evaluator)
+                         evaluate_population_joint, make_evaluator,
+                         make_joint_evaluator)
 from .objectives import (MultiObjective, Objective, is_multi_spec,
                          make_multi_objective, make_objective,
                          per_workload_scores, AREA_CONSTRAINT_MM2)
@@ -15,9 +16,12 @@ from .genetic import (FOUR_PHASES, PLAIN_PHASE, MultiSearchResult, Phase,
                       SearchResult, batched_joint_search, ga_scan,
                       joint_search, phase_schedule, plain_ga_search,
                       random_search, run_ga, run_ga_loop, search_kernel)
-from .workloads import (PAPER_4, PAPER_9, Workload, WorkloadArrays,
-                        from_arch_config, get_workload, get_workload_set,
-                        pack)
+from .workloads import (FAMILY_NAMES, PAPER_4, PAPER_9, ArchParam, Workload,
+                        WorkloadArrays, WorkloadBuilder, WorkloadFamily,
+                        WorkloadTensors, from_arch_config, get_family,
+                        get_workload, get_workload_set,
+                        make_workload_builder, pack, resnet_family,
+                        vit_family)
 from .nonideal import (BASELINE_ACC, accuracy_proxy_host,
                        make_accuracy_model, noisy_crossbar_gemm)
 from .nsga import (MOSearchResult, MultiMOSearchResult,

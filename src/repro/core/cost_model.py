@@ -106,19 +106,23 @@ def _resolve(space: SearchSpace, table: jax.Array, genomes: jax.Array,
     return out
 
 
-def evaluate_population(space: SearchSpace, wl: WorkloadArrays,
-                        genomes: jax.Array,
-                        constants: HWConstants = HWConstants(),
-                        table: jax.Array | None = None) -> CostMetrics:
-    """Pure function: (P, n_params) int32 genomes -> CostMetrics.
+def _cost_core(space: SearchSpace, c: HWConstants, p: Dict[str, jax.Array],
+               *, M: jax.Array, K: jax.Array, N: jax.Array,
+               seg_onehot: jax.Array, stored_weights: jax.Array,
+               mask: jax.Array | None = None,
+               wbits: jax.Array | None = None) -> CostMetrics:
+    """Shared cost math over a (B, Lt) layer axis reduced to (P, W).
 
-    All math broadcasts over P (population) and W (workloads); layer
-    sums reduce the padded L axis with the workload mask.
+    Two callers:
+      fixed path (``evaluate_population``) — B=1, Lt=Ltot ragged flat
+        layers, ``mask``/``wbits`` None: layer sums are a plain
+        ``x @ seg_onehot`` and cells-per-weight is the per-genome scalar
+        ceil(8/bits_cell). Bit-identical to the pre-refactor model.
+      joint path (``evaluate_population_joint``) — B=P, Lt=W*Lmax padded
+        per-genome layers from a traced workload builder: pad rows are
+        zeroed by ``mask`` before every segment sum and ``wbits`` gives
+        per-layer weight precision (searched by the arch genome slice).
     """
-    c = constants
-    if table is None:
-        table = jnp.asarray(space.value_table())
-    p = _resolve(space, table, genomes)
     is_rram = space.mem_type == "rram"
 
     rows, cols = p["xbar_rows"], p["xbar_cols"]
@@ -144,16 +148,17 @@ def evaluate_population(space: SearchSpace, wl: WorkloadArrays,
     t_cycle = jnp.maximum(p["t_cycle_ns"] * 1e-9, min_cycle)
 
     # --- per-layer crossbar mapping -----------------------------------------
-    # flat ragged layout: (Ltot,) layers across all workloads, reduced to
-    # (P, W) via a one-hot segment matmul — no padding waste (§Perf it.8)
-    M = wl.flat_layers[None, :, 0]   # (1, Ltot)
-    K = wl.flat_layers[None, :, 1]
-    N = wl.flat_layers[None, :, 2]
-    seg_onehot = jax.nn.one_hot(wl.seg_ids, wl.n_workloads,
-                                dtype=jnp.float32)        # (Ltot, W)
     r_ = rows[:, None]
     c_ = cols[:, None]
-    cpw_ = cpw[:, None]
+    if wbits is None:
+        cpw_ = cpw[:, None]
+    else:
+        cpw_ = jnp.ceil(wbits / bits_cell[:, None])    # per-layer cells
+
+    def sum_l(x):                                               # (P, W)
+        if mask is None:
+            return x @ seg_onehot
+        return (x * mask) @ seg_onehot
 
     n_xb_row = jnp.ceil(K / r_)
     n_xb_col = jnp.ceil(N * cpw_ / c_)
@@ -166,11 +171,10 @@ def evaluate_population(space: SearchSpace, wl: WorkloadArrays,
     # this utilization effect is exactly the cross-workload tension on
     # crossbar size the paper's search exploits (§IV-F).
     capacity_cells = n_xb * rows * cols                          # (P,)
-    mapped_xbars = n_xb_layer @ seg_onehot                       # (P, W)
+    mapped_xbars = sum_l(n_xb_layer)                             # (P, W)
     # stored-only weights (inactive MoE experts): dense slabs, packed ~1
     extra_w = jnp.maximum(
-        wl.stored_weights[None, :]
-        - ((K * N) @ seg_onehot), 0.0)                           # (P, W)
+        stored_weights - sum_l(K * N), 0.0)                      # (P, W)
     mapped_xbars = mapped_xbars + jnp.ceil(
         extra_w * cpw[:, None] / (rows * cols)[:, None])
     mapped_cells = mapped_xbars * (rows * cols)[:, None]         # (P, W)
@@ -206,8 +210,6 @@ def evaluate_population(space: SearchSpace, wl: WorkloadArrays,
     e_spill = spill * c.e_dram
     l_spill = spill / c.dram_bw
 
-    def sum_l(x):                                               # (P, W)
-        return x @ seg_onehot
     # DRAM (external) energy does not scale with the on-chip node
     E = (sum_l(e_layer_dig) * e_scale[:, None]
          + sum_l(e_layer_adc) * e_scale_adc[:, None]
@@ -220,7 +222,7 @@ def evaluate_population(space: SearchSpace, wl: WorkloadArrays,
         swap_frac = jnp.clip(
             1.0 - capacity_cells[:, None] / jnp.maximum(mapped_cells, 1.0),
             0.0, 1.0)
-        swapped = wl.stored_weights[None, :] * swap_frac        # bytes
+        swapped = stored_weights * swap_frac                    # bytes
         E = E + swapped * c.e_dram                              # external
         L = L + swapped / c.dram_bw
 
@@ -248,6 +250,62 @@ def evaluate_population(space: SearchSpace, wl: WorkloadArrays,
                        cost=cost, feasible_w=feasible_w)
 
 
+def evaluate_population(space: SearchSpace, wl: WorkloadArrays,
+                        genomes: jax.Array,
+                        constants: HWConstants = HWConstants(),
+                        table: jax.Array | None = None) -> CostMetrics:
+    """Pure function: (P, n_params) int32 genomes -> CostMetrics.
+
+    All math broadcasts over P (population) and W (workloads); layer
+    sums reduce the ragged flat layer axis with a one-hot segment
+    matmul — no padding waste (§Perf it.8).
+    """
+    c = constants
+    if table is None:
+        table = jnp.asarray(space.value_table())
+    p = _resolve(space, table, genomes)
+    seg_onehot = jax.nn.one_hot(wl.seg_ids, wl.n_workloads,
+                                dtype=jnp.float32)        # (Ltot, W)
+    return _cost_core(space, c, p,
+                      M=wl.flat_layers[None, :, 0],       # (1, Ltot)
+                      K=wl.flat_layers[None, :, 1],
+                      N=wl.flat_layers[None, :, 2],
+                      seg_onehot=seg_onehot,
+                      stored_weights=wl.stored_weights[None, :])
+
+
+def evaluate_population_joint(space: SearchSpace, builder,
+                              genomes: jax.Array,
+                              constants: HWConstants = HWConstants(),
+                              table: jax.Array | None = None) -> CostMetrics:
+    """Joint co-search cost path: the workload layer tensor is a traced
+    function of each genome's arch slice (``WorkloadBuilder``), so the
+    whole evaluation stays one pure jittable function of the genomes.
+
+    Layer axes are padded (W * Lmax per genome) with a validity mask;
+    per-layer weight precision from the builder feeds the cells-per-
+    weight mapping. With zero families this is the same math as the
+    flat path up to summation order (pads are masked, not absent).
+    """
+    c = constants
+    if table is None:
+        table = jnp.asarray(space.value_table())
+    p = _resolve(space, table, genomes)
+    wt = builder(genomes)
+    P = genomes.shape[0]
+    W, Lm = builder.n_workloads, builder.lmax
+    layers = wt.layers.reshape(P, W * Lm, 3)
+    seg_ids = jnp.repeat(jnp.arange(W, dtype=jnp.int32), Lm)
+    seg_onehot = jax.nn.one_hot(seg_ids, W, dtype=jnp.float32)
+    return _cost_core(space, c, p,
+                      M=layers[:, :, 0], K=layers[:, :, 1],
+                      N=layers[:, :, 2],
+                      seg_onehot=seg_onehot,
+                      stored_weights=wt.stored,
+                      mask=wt.mask.reshape(P, W * Lm),
+                      wbits=wt.wbits.reshape(P, W * Lm))
+
+
 def make_evaluator(space: SearchSpace, wl: WorkloadArrays,
                    constants: HWConstants = HWConstants()):
     """jit-compiled population evaluator: genomes (P, n) -> CostMetrics."""
@@ -256,5 +314,19 @@ def make_evaluator(space: SearchSpace, wl: WorkloadArrays,
     @jax.jit
     def evaluator(genomes: jax.Array) -> CostMetrics:
         return evaluate_population(space, wl, genomes, constants, table)
+
+    return evaluator
+
+
+def make_joint_evaluator(space: SearchSpace, builder,
+                         constants: HWConstants = HWConstants()):
+    """jit-compiled joint evaluator: genomes (P, n_hw+n_arch) ->
+    CostMetrics, with workload tensors built from the arch slice."""
+    table = jnp.asarray(space.value_table())
+
+    @jax.jit
+    def evaluator(genomes: jax.Array) -> CostMetrics:
+        return evaluate_population_joint(space, builder, genomes,
+                                         constants, table)
 
     return evaluator

@@ -190,10 +190,12 @@ def calibration_data(key: jax.Array, n_calib: int, calib_k: int,
 
 
 def make_accuracy_model(space: SearchSpace,
-                        workloads: Union[WorkloadArrays, Sequence[Workload]],
+                        workloads: Union[WorkloadArrays, Sequence[Workload],
+                                         None] = None,
                         *, key: jax.Array | None = None,
                         n_calib: int = 32, calib_k: int = 256,
                         calib_n: int = 32, adc_bits: int = 8,
+                        builder=None,
                         ) -> Callable[[jax.Array], jax.Array]:
     """Traceable batched accuracy model: (P, n) genomes -> (P, W).
 
@@ -207,9 +209,18 @@ def make_accuracy_model(space: SearchSpace,
     summation order) to the static tiling of noisy_crossbar_gemm /
     kernels/ref.imc_matmul_ref.
 
+    Joint co-search: pass a ``WorkloadBuilder`` as ``builder`` instead
+    of fixed ``workloads`` — per-genome clean base accuracy and depth
+    penalty then come from the genome's own architecture slice, while
+    the hardware slice still drives the SNR retention. The per-genome
+    accuracy couples both slices: noisy hardware (deep rows, multi-bit
+    cells) punishes low-precision/shallow architectures first.
+
     The closure is pure JAX: compose it into objective scorers and it
     compiles into the scanned GA / vmapped search batch unchanged.
     """
+    if (workloads is None) == (builder is None):
+        raise ValueError("pass exactly one of workloads / builder")
     key = jax.random.PRNGKey(CALIB_SEED) if key is None else key
     k_calib, k_noise = jax.random.split(key)
     x, w = calibration_data(k_calib, n_calib, calib_k, calib_n)
@@ -233,8 +244,9 @@ def make_accuracy_model(space: SearchSpace,
     sub_idx = jnp.arange(n_sub, dtype=jnp.float32)
     group_idx = jnp.arange(n_sub, dtype=jnp.float32)
     pow2 = 2.0 ** jnp.arange(8, dtype=jnp.float32)
-    base_np, pen_np = _workload_accuracy_params(workloads)
-    base_acc, depth_pen = jnp.asarray(base_np), jnp.asarray(pen_np)
+    if builder is None:
+        base_np, pen_np = _workload_accuracy_params(workloads)
+        base_acc, depth_pen = jnp.asarray(base_np), jnp.asarray(pen_np)
 
     def one(genome: jax.Array, flat_idx: jax.Array) -> jax.Array:
         rows = table[rows_i, genome[rows_i]]
@@ -257,14 +269,19 @@ def make_accuracy_model(space: SearchSpace,
         err = jnp.mean((y - y_ref) ** 2)
         sig = jnp.mean(y_ref ** 2)
         snr_db = 10.0 * jnp.log10(sig / jnp.maximum(err, 1e-12))
-        snr_db = snr_db + 10.0 * jnp.log10(cpw)  # multi-cell averaging
-        return _snr_to_accuracy(snr_db, base_acc, depth_pen)
+        return snr_db + 10.0 * jnp.log10(cpw)  # multi-cell averaging
 
     batched = jax.vmap(one)
 
     def accuracy(genomes: jax.Array) -> jax.Array:
         genomes = jnp.asarray(genomes)
-        return batched(genomes, genome_flat_index(space, genomes))
+        snr_db = batched(genomes, genome_flat_index(space, genomes))
+        if builder is None:
+            return _snr_to_accuracy(snr_db[:, None], base_acc[None, :],
+                                    depth_pen[None, :])
+        wt = builder(genomes)
+        pen = jnp.clip(1.0 - 0.002 * wt.n_layers, 0.8, 1.0)    # (P, W)
+        return _snr_to_accuracy(snr_db[:, None], wt.base_acc, pen)
 
     return accuracy
 

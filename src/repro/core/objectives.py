@@ -61,10 +61,18 @@ def aggregate_scores(per_workload: jnp.ndarray, scheme: str) -> jnp.ndarray:
 @dataclasses.dataclass(frozen=True)
 class Objective:
     """kind: edap | edp | energy | delay | area | cost | edap_cost |
-    edap_acc"""
+    edap_acc | acc_loss
+
+    ``min_accuracy > 0`` adds a hard accuracy constraint: any design
+    whose accuracy on *any* workload falls below the bar is penalized
+    infeasible (the joint co-search's counterweight against collapsing
+    to the smallest/lowest-precision architecture). The default 0.0
+    keeps every existing objective unchanged.
+    """
     kind: str = "edap"
     aggregation: str = "max"
     area_constraint: float = AREA_CONSTRAINT_MM2
+    min_accuracy: float = 0.0
 
     def __call__(self, m: CostMetrics,
                  accuracy: Optional[jnp.ndarray] = None) -> jnp.ndarray:
@@ -94,14 +102,22 @@ class Objective:
             acc_prod = jnp.exp(jnp.sum(jnp.log(
                 jnp.maximum(accuracy, 1e-6)), axis=1))
             s = e_mj * l_ms * a / acc_prod
+        elif self.kind == "acc_loss":
+            # accuracy-loss axis for joint fronts: 1 - agg(Acc_w)
+            assert accuracy is not None
+            s = 1.0 - _agg(accuracy, self.aggregation)
         else:
             raise ValueError(self.kind)
         bad = (~m.feasible) | (m.area > self.area_constraint)
+        if self.min_accuracy > 0.0:
+            assert accuracy is not None, \
+                "min_accuracy constraint needs an accuracy model"
+            bad = bad | jnp.any(accuracy < self.min_accuracy, axis=1)
         return jnp.where(bad, _BIG, s)
 
 
 OBJECTIVE_KINDS = ("edap", "edp", "energy", "delay", "area", "cost",
-                   "edap_cost", "edap_acc")
+                   "edap_cost", "edap_acc", "acc_loss")
 AGGREGATIONS = ("max", "mean", "all")
 
 
@@ -144,20 +160,21 @@ def is_multi_spec(spec: str) -> bool:
 
 def make_multi_objective(spec: str,
                          area_constraint: float = AREA_CONSTRAINT_MM2,
-                         ) -> MultiObjective:
+                         min_accuracy: float = 0.0) -> MultiObjective:
     """Parse a '+'-joined spec into a MultiObjective
     (``"edap:mean+cost"`` -> columns edap:mean, cost)."""
     parts = [p.strip() for p in spec.split("+")]
     if len(parts) < 2 or not all(parts):
         raise ValueError(f"multi-objective spec {spec!r} needs >= 2 "
                          "'+'-separated components")
-    return MultiObjective(tuple(make_objective(p, area_constraint)
+    return MultiObjective(tuple(make_objective(p, area_constraint,
+                                               min_accuracy)
                                 for p in parts))
 
 
 def make_objective(spec: str,
                    area_constraint: float = AREA_CONSTRAINT_MM2,
-                   ) -> AnyObjective:
+                   min_accuracy: float = 0.0) -> AnyObjective:
     """Parse an objective spec string into an Objective.
 
     Accepts ``"edap"`` (default max aggregation) or ``"edap:mean"``,
@@ -166,7 +183,7 @@ def make_objective(spec: str,
     (``"edap:mean+cost"``) returns a MultiObjective whose (P, D) score
     matrix the NSGA-II engine searches directly."""
     if is_multi_spec(spec):
-        return make_multi_objective(spec, area_constraint)
+        return make_multi_objective(spec, area_constraint, min_accuracy)
     kind, _, agg = spec.partition(":")
     agg = agg or "max"
     if kind not in OBJECTIVE_KINDS:
@@ -175,7 +192,7 @@ def make_objective(spec: str,
     if agg not in AGGREGATIONS:
         raise ValueError(f"unknown aggregation {agg!r}; "
                          f"expected one of {AGGREGATIONS}")
-    return Objective(kind, agg, area_constraint)
+    return Objective(kind, agg, area_constraint, min_accuracy)
 
 
 def per_workload_scores(m: CostMetrics, kind: str = "edap",
@@ -212,4 +229,7 @@ def per_workload_scores(m: CostMetrics, kind: str = "edap",
     if kind == "edap_acc":
         assert accuracy is not None
         return e_mj * l_ms * a / jnp.maximum(accuracy, 1e-6)
+    if kind == "acc_loss":
+        assert accuracy is not None
+        return 1.0 - accuracy
     raise ValueError(kind)

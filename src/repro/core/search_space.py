@@ -55,10 +55,34 @@ class SearchSpace:
     values: Tuple[np.ndarray, ...]
     mem_type: str  # "rram" | "sram"
     tech_is_variable: bool
+    # Trailing workload-architecture dimensions (joint co-search). The
+    # genome layout is [hardware slice | arch slice]; n_arch == 0 for
+    # pure hardware spaces. Arch params are named "<family>.<param>".
+    n_arch: int = 0
 
     @property
     def n_params(self) -> int:
         return len(self.names)
+
+    @property
+    def n_hw(self) -> int:
+        return len(self.names) - self.n_arch
+
+    @property
+    def hw_names(self) -> Tuple[str, ...]:
+        return self.names[: self.n_hw]
+
+    @property
+    def arch_names(self) -> Tuple[str, ...]:
+        return self.names[self.n_hw:]
+
+    def hw_slice(self, genomes):
+        """Hardware columns of a (..., n_params) genome array."""
+        return genomes[..., : self.n_hw]
+
+    def arch_slice(self, genomes):
+        """Architecture columns of a (..., n_params) genome array."""
+        return genomes[..., self.n_hw:]
 
     @property
     def cardinalities(self) -> np.ndarray:
@@ -150,6 +174,31 @@ def reduced_rram_space() -> SearchSpace:
         ("c_per_tile", [2.0, 4.0, 8.0, 16.0, 32.0]),
     ]
     return _mk(nv, "rram", False)
+
+
+def joint_space(base: SearchSpace, families: Sequence) -> SearchSpace:
+    """Append workload-architecture dimensions to a hardware space.
+
+    Each family param becomes a genome column named
+    ``"<family>.<param>"`` appended *after* the hardware slice, so
+    existing hardware-only code that indexes by name is unaffected and
+    slicing off the trailing ``n_arch`` columns recovers the hardware
+    genome. With no families the base space is returned unchanged.
+    """
+    families = list(families)
+    if not families:
+        return base
+    names = list(base.names)
+    values = list(base.values)
+    for fam in families:
+        for p in fam.params:
+            names.append(f"{fam.name}.{p.name}")
+            values.append(np.asarray(p.values, dtype=np.float32))
+    n_arch = base.n_arch + sum(len(f.params) for f in families)
+    return SearchSpace(names=tuple(names), values=tuple(values),
+                       mem_type=base.mem_type,
+                       tech_is_variable=base.tech_is_variable,
+                       n_arch=n_arch)
 
 
 def get_space(mem_type: str, tech_variable: bool = False) -> SearchSpace:

@@ -18,7 +18,8 @@ check in the cost model does the same via ceil(8 / bits_cell).
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Sequence, Tuple
+import itertools
+from typing import Callable, List, NamedTuple, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
@@ -30,10 +31,20 @@ class Workload:
     name: str
     layers: np.ndarray  # (L, 3) float64 [M, K, N]
     stored_weights: float  # weights the chip must hold (>= active for MoE)
+    # per-layer weight precision (L,) in bits; None = WEIGHT_BITS
+    # everywhere. Only the joint co-search families vary it (the cost
+    # model's cells-per-weight becomes per-layer on that path).
+    weight_bits: Optional[np.ndarray] = None
 
     @property
     def n_layers(self) -> int:
         return int(self.layers.shape[0])
+
+    @property
+    def layer_weight_bits(self) -> np.ndarray:
+        if self.weight_bits is None:
+            return np.full((self.n_layers,), float(WEIGHT_BITS))
+        return np.asarray(self.weight_bits, dtype=np.float64)
 
     @property
     def macs(self) -> float:
@@ -269,7 +280,12 @@ _REGISTRY = {
 
 
 def get_workload(name: str) -> Workload:
-    return _REGISTRY[name]()
+    try:
+        return _REGISTRY[name]()
+    except KeyError:
+        raise ValueError(
+            f"unknown workload {name!r}; valid workloads: "
+            + ", ".join(sorted(_REGISTRY))) from None
 
 
 def get_workload_set(names: Sequence[str]) -> List[Workload]:
@@ -318,3 +334,295 @@ def pack(workloads: Sequence[Workload]) -> WorkloadArrays:
                           layers=layers, mask=mask, stored_weights=stored,
                           flat_layers=np.concatenate(flat, axis=0),
                           seg_ids=np.concatenate(segs, axis=0))
+
+
+# ---------------------------------------------------------------------------
+# Workload families: architecture dimensions as searchable genome slices
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ArchParam:
+    """One searchable architecture dimension of a workload family."""
+    name: str
+    values: Tuple[float, ...]
+
+
+@dataclasses.dataclass
+class WorkloadFamily:
+    """A parameterized model family whose architecture knobs become extra
+    genome dimensions in a joint co-search (see ``joint_space``).
+
+    ``build(cfg)`` maps a {param_name: value} dict to a concrete
+    ``Workload`` (with per-layer ``weight_bits`` when the family varies
+    precision); ``base_accuracy(cfg)`` gives the *clean* (noise-free)
+    accuracy of that architecture, anchored to published top-1 numbers.
+    """
+    name: str
+    params: Tuple[ArchParam, ...]
+    build: Callable[[dict], Workload]
+    base_accuracy: Callable[[dict], float]
+
+    def __post_init__(self):
+        self._combos_cache: Optional[List[dict]] = None
+        self._built_cache: Optional[List[Workload]] = None
+
+    @property
+    def cardinalities(self) -> Tuple[int, ...]:
+        return tuple(len(p.values) for p in self.params)
+
+    @property
+    def n_combos(self) -> int:
+        return int(np.prod(self.cardinalities))
+
+    def combos(self) -> List[dict]:
+        """All {param: value} configs in mixed-radix order (first param
+        is the most significant digit) — the same order the traced
+        builder's flat index uses."""
+        if self._combos_cache is None:
+            self._combos_cache = [
+                dict(zip((p.name for p in self.params), vals))
+                for vals in itertools.product(*(p.values for p in self.params))
+            ]
+        return self._combos_cache
+
+    def built(self) -> List[Workload]:
+        if self._built_cache is None:
+            self._built_cache = [self.build(c) for c in self.combos()]
+        return self._built_cache
+
+    def build_at(self, idx: Sequence[int]) -> Workload:
+        cfg = {p.name: p.values[int(i)] for p, i in zip(self.params, idx)}
+        return self.build(cfg)
+
+    def accuracy_at(self, idx: Sequence[int]) -> float:
+        cfg = {p.name: p.values[int(i)] for p, i in zip(self.params, idx)}
+        return float(self.base_accuracy(cfg))
+
+    @property
+    def n_layers(self) -> int:
+        """Max layer count over the family (padded tensor depth)."""
+        return max(w.n_layers for w in self.built())
+
+
+def _resnet_at(cfg: dict) -> Workload:
+    """Uniform basic-block ResNet: depth d -> (d-2)//8 blocks per stage
+    (d=18 reproduces ``resnet18()`` exactly at width 1.0)."""
+    depth = int(cfg["depth"])
+    wm = float(cfg["width_mult"])
+    nblk = (depth - 2) // 8
+    ch = [max(8, int(round(c * wm))) for c in (64, 128, 256, 512)]
+    L: List[Tuple[float, float, float]] = [_conv(112, 3, 7, ch[0])]
+    cin = ch[0]
+    for cout, hw in zip(ch, (56, 28, 14, 7)):
+        for b in range(nblk):
+            c_in = cin if b == 0 else cout
+            L.append(_conv(hw, c_in, 3, cout))
+            L.append(_conv(hw, cout, 3, cout))
+        if cin != cout:
+            L.append(_conv(hw, cin, 1, cout))  # projection shortcut
+        cin = cout
+    L.append(_fc(ch[3], 1000))
+    arr = np.asarray(L, dtype=np.float64)
+    n = arr.shape[0]
+    wb = np.full((n,), float(cfg.get("wbits_late", WEIGHT_BITS)))
+    wb[: n // 2] = float(cfg.get("wbits_early", WEIGHT_BITS))
+    return Workload(name=f"resnet_d{depth}_w{wm:g}",
+                    layers=arr,
+                    stored_weights=float(np.sum(arr[:, 1] * arr[:, 2])),
+                    weight_bits=wb)
+
+
+def _resnet_base_acc(cfg: dict) -> float:
+    """Clean top-1 anchored at ResNet18/ImageNet = 0.698; depth and
+    width follow the published ResNet scaling trend, low-precision
+    weights cost accuracy (PTQ-style penalty, stronger for 4-bit)."""
+    depth = float(cfg["depth"])
+    wm = float(cfg["width_mult"])
+    bits = 0.5 * (float(cfg.get("wbits_early", 8))
+                  + float(cfg.get("wbits_late", 8)))
+    acc = (0.698 + 0.045 * np.log2(depth / 18.0)
+           + 0.030 * np.log2(wm)
+           - 0.040 * (8.0 - bits) / 4.0)
+    return float(np.clip(acc, 0.30, 0.92))
+
+
+def resnet_family() -> WorkloadFamily:
+    return WorkloadFamily(
+        name="resnet_family",
+        params=(ArchParam("depth", (10.0, 18.0, 26.0, 34.0)),
+                ArchParam("width_mult", (0.5, 1.0, 1.5)),
+                ArchParam("wbits_early", (4.0, 8.0)),
+                ArchParam("wbits_late", (4.0, 8.0))),
+        build=_resnet_at,
+        base_accuracy=_resnet_base_acc)
+
+
+def _vit_at(cfg: dict) -> Workload:
+    depth = int(cfg["depth"])
+    heads = int(cfg["heads"])
+    ff_ratio = float(cfg["ff_ratio"])
+    d = 768
+    L = [(196.0, 768.0, 768.0)]  # patch embedding (16*16*3 = 768)
+    L += _transformer_layers(197, d, int(ff_ratio * d), depth, 1000,
+                             d_head_total=heads * 64)
+    arr = np.asarray(L, dtype=np.float64)
+    wb = np.full((arr.shape[0],), float(cfg.get("wbits", WEIGHT_BITS)))
+    return Workload(name=f"vit_d{depth}_h{heads}_f{ff_ratio:g}",
+                    layers=arr,
+                    stored_weights=float(np.sum(arr[:, 1] * arr[:, 2])),
+                    weight_bits=wb)
+
+
+def _vit_base_acc(cfg: dict) -> float:
+    """Clean top-1 anchored at ViT-B/16 (depth 12, heads 12, ff 4x,
+    8-bit) = 0.779."""
+    acc = (0.779 + 0.050 * np.log2(float(cfg["depth"]) / 12.0)
+           + 0.020 * np.log2(float(cfg["heads"]) / 12.0)
+           + 0.020 * np.log2(float(cfg["ff_ratio"]) / 4.0)
+           - 0.040 * (8.0 - float(cfg.get("wbits", 8))) / 4.0)
+    return float(np.clip(acc, 0.30, 0.92))
+
+
+def vit_family() -> WorkloadFamily:
+    return WorkloadFamily(
+        name="vit_family",
+        params=(ArchParam("depth", (6.0, 12.0)),
+                ArchParam("heads", (6.0, 12.0)),
+                ArchParam("ff_ratio", (2.0, 4.0)),
+                ArchParam("wbits", (4.0, 8.0))),
+        build=_vit_at,
+        base_accuracy=_vit_base_acc)
+
+
+_FAMILY_REGISTRY = {
+    "resnet_family": resnet_family,
+    "vit_family": vit_family,
+}
+
+FAMILY_NAMES = tuple(sorted(_FAMILY_REGISTRY))
+
+
+def get_family(name: str) -> WorkloadFamily:
+    try:
+        return _FAMILY_REGISTRY[name]()
+    except KeyError:
+        raise ValueError(
+            f"unknown workload family {name!r}; valid families: "
+            + ", ".join(sorted(_FAMILY_REGISTRY))) from None
+
+
+class WorkloadTensors(NamedTuple):
+    """Per-genome workload descriptors produced by a traced builder.
+
+    Leading axes are (P, W): population x workload slot. ``layers`` pads
+    with benign 1.0 rows (masked out), ``wbits`` pads with 8.0.
+    """
+    layers: "object"    # (P, W, Lmax, 3)
+    mask: "object"      # (P, W, Lmax)
+    wbits: "object"     # (P, W, Lmax)
+    stored: "object"    # (P, W)
+    base_acc: "object"  # (P, W)
+    n_layers: "object"  # (P, W)
+
+
+def _pack_combo_tables(workloads: Sequence[Workload], lmax: int):
+    C = len(workloads)
+    layers = np.ones((C, lmax, 3), dtype=np.float32)
+    mask = np.zeros((C, lmax), dtype=np.float32)
+    wbits = np.full((C, lmax), float(WEIGHT_BITS), dtype=np.float32)
+    stored = np.zeros((C,), dtype=np.float32)
+    nl = np.zeros((C,), dtype=np.float32)
+    for i, w in enumerate(workloads):
+        layers[i, : w.n_layers] = w.layers
+        mask[i, : w.n_layers] = 1.0
+        wbits[i, : w.n_layers] = w.layer_weight_bits
+        stored[i] = w.stored_weights
+        nl[i] = w.n_layers
+    return layers, mask, wbits, stored, nl
+
+
+@dataclasses.dataclass(frozen=True)
+class _BuilderSlot:
+    cols: Tuple[int, ...]       # genome columns, most-significant first
+    radices: Tuple[int, ...]    # cardinalities matching ``cols``
+    layers: np.ndarray          # (C, Lmax, 3)
+    mask: np.ndarray            # (C, Lmax)
+    wbits: np.ndarray           # (C, Lmax)
+    stored: np.ndarray          # (C,)
+    base_acc: np.ndarray        # (C,)
+    n_layers: np.ndarray        # (C,)
+
+
+@dataclasses.dataclass(frozen=True)
+class WorkloadBuilder:
+    """Pure traceable map: genome arch-slice -> padded workload tensors.
+
+    Host-side, every architecture combo of every family slot is built
+    once and packed into gather tables (shared global Lmax). Under jit
+    the builder is just a mixed-radix index + table gathers, so the
+    whole joint co-search stays inside one compiled ``lax.scan``.
+    """
+    names: Tuple[str, ...]
+    lmax: int
+    slots: Tuple[_BuilderSlot, ...]
+
+    @property
+    def n_workloads(self) -> int:
+        return len(self.names)
+
+    def __call__(self, genomes) -> WorkloadTensors:
+        import jax.numpy as jnp
+        g = jnp.asarray(genomes)
+        per = {f: [] for f in WorkloadTensors._fields}
+        for s in self.slots:
+            if s.cols:
+                idx = jnp.zeros(g.shape[:-1], jnp.int32)
+                for c, rad in zip(s.cols, s.radices):
+                    idx = idx * rad + g[..., c]
+            else:
+                idx = jnp.zeros(g.shape[:-1], jnp.int32)
+            per["layers"].append(jnp.asarray(s.layers)[idx])
+            per["mask"].append(jnp.asarray(s.mask)[idx])
+            per["wbits"].append(jnp.asarray(s.wbits)[idx])
+            per["stored"].append(jnp.asarray(s.stored)[idx])
+            per["base_acc"].append(jnp.asarray(s.base_acc)[idx])
+            per["n_layers"].append(jnp.asarray(s.n_layers)[idx])
+        ax = g.ndim - 1
+        return WorkloadTensors(**{k: jnp.stack(v, axis=ax)
+                                  for k, v in per.items()})
+
+
+def make_workload_builder(space, workloads: Sequence[Union[Workload,
+                                                           "WorkloadFamily"]]
+                          ) -> WorkloadBuilder:
+    """Build the traced genome-slice -> workload-tensor map.
+
+    ``workloads`` may mix fixed ``Workload``s (constant slots, no genome
+    dependence) and ``WorkloadFamily``s (their params must appear in
+    ``space`` as ``"<family>.<param>"`` columns, as ``joint_space``
+    lays them out). With zero families this degenerates to constant
+    tensors — the fixed-workload case.
+    """
+    built: List[List[Workload]] = []
+    for w in workloads:
+        built.append(w.built() if isinstance(w, WorkloadFamily) else [w])
+    lmax = max(w.n_layers for combos in built for w in combos)
+    slots = []
+    for w, combos in zip(workloads, built):
+        layers, mask, wbits, stored, nl = _pack_combo_tables(combos, lmax)
+        if isinstance(w, WorkloadFamily):
+            cols = tuple(space.names.index(f"{w.name}.{p.name}")
+                         for p in w.params)
+            radices = w.cardinalities
+            base = np.asarray([w.base_accuracy(c) for c in w.combos()],
+                              dtype=np.float32)
+        else:
+            cols, radices = (), ()
+            from .nonideal import BASELINE_ACC, _DEFAULT_BASE_ACC
+            base = np.asarray([BASELINE_ACC.get(w.name, _DEFAULT_BASE_ACC)],
+                              dtype=np.float32)
+        slots.append(_BuilderSlot(cols=cols, radices=radices, layers=layers,
+                                  mask=mask, wbits=wbits, stored=stored,
+                                  base_acc=base, n_layers=nl))
+    names = tuple(w.name for w in workloads)
+    return WorkloadBuilder(names=names, lmax=lmax, slots=tuple(slots))

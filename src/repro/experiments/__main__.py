@@ -147,8 +147,10 @@ def main(argv=None) -> int:
     args = ap.parse_args(argv)
     try:
         return args.fn(args)
-    except KeyError as e:
-        # unknown scenario name: clean message, not a traceback
+    except (KeyError, ValueError) as e:
+        # unknown scenario/workload name: clean message listing the
+        # valid choices (see scenarios.get_scenario and
+        # core.workloads.get_workload), not a traceback
         print(f"error: {e.args[0]}", file=sys.stderr)
         return 2
 

@@ -250,6 +250,26 @@ def render_markdown(result: Dict) -> str:
         "|---|---|",
     ]
     lines += [f"| {k} | {v:g} |" for k, v in g["design"].items()]
+    joint = result.get("joint")
+    if joint:
+        lines += [
+            "",
+            "## Chosen workload architecture",
+            "",
+            "Joint co-search: the genome's trailing "
+            f"{joint['n_arch_dims']} dimensions select the workload "
+            "architecture (families: "
+            f"{', '.join(joint['families'])}); the values below are "
+            "what the search chose *together with* the hardware above.",
+            "",
+            "| arch parameter | value |",
+            "|---|---|",
+        ]
+        lines += [f"| {k} | {v:g} |"
+                  for k, v in joint["arch_params"].items()]
+        lines += [""]
+        lines += [f"- `{fam}` resolves to model **{model}**"
+                  for fam, model in joint["chosen_models"].items()]
     gap = result.get("gap")
     has_acc = any("accuracy" in m for m in g["per_workload"].values())
     lines += ["", "## Per-workload breakdown", ""]
@@ -300,7 +320,8 @@ def render_markdown(result: Dict) -> str:
             summary = ", ".join(
                 f"{k}={v:g}" for k, v in d.items()
                 if k in ("xbar_rows", "xbar_cols", "c_per_tile",
-                         "g_per_chip", "bits_cell"))
+                         "g_per_chip", "bits_cell")
+                or "." in k)  # joint arch dims ("<family>.<param>")
             lines.append(f"| {_fmt(p[axes[1]])} | {_fmt(p[axes[0]])} "
                          f"| {p['tech_nm']:g} | {summary} |")
         if pareto.get("hypervolume") is not None:

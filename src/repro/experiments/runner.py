@@ -69,7 +69,9 @@ from ..core import (FOUR_PHASES, MultiMOSearchResult, MultiSearchResult,
                     joint_search, make_evaluator, make_objective,
                     nonideal, pack, phase_schedule, plain_ga_search,
                     random_search, search_kernel)
-from ..core.cost_model import HWConstants, evaluate_population
+from ..core.cost_model import (HWConstants, evaluate_population,
+                               evaluate_population_joint)
+from ..core.workloads import WorkloadFamily, make_workload_builder
 from ..core.distributed import compile_batched_search, make_sharded_scorer
 from ..core.objectives import (INFEASIBLE_PENALTY, MultiObjective,
                                Objective, aggregate_scores,
@@ -161,24 +163,44 @@ class TracedScorer(NamedTuple):
     score_vec: Optional[Callable] = None  # (P, n) -> (P, D), MO only
 
 
-def make_traced_scorer(space: SearchSpace, wa: WorkloadArrays,
+def make_traced_scorer(space: SearchSpace, wa: Optional[WorkloadArrays],
                        objective: Objective,
                        constants: HWConstants = HWConstants(), *,
                        n_calib: int = 32,
-                       calib_k: int = 256) -> TracedScorer:
+                       calib_k: int = 256,
+                       builder=None) -> TracedScorer:
+    """``builder`` (a core.workloads.WorkloadBuilder) switches the cost
+    path to the joint genome-slice evaluator: workload tensors become a
+    traced function of each genome's arch slice, and the accuracy model
+    reads per-genome base accuracy from the same builder. ``wa`` is
+    ignored on that path (pass None)."""
     table = jnp.asarray(space.value_table())
     is_mo = isinstance(objective, MultiObjective)
     kinds = objective.kinds if is_mo else (objective.kind,)
-    first = objective.components[0] if is_mo else objective
+    components = objective.components if is_mo else (objective,)
+    first = components[0]
 
+    needs_acc = (any(k in ("edap_acc", "acc_loss") for k in kinds)
+                 or any(o.min_accuracy > 0.0 for o in components))
     acc_fn = None
-    if "edap_acc" in kinds:
-        acc_fn = nonideal.make_accuracy_model(space, wa,
-                                              n_calib=n_calib,
-                                              calib_k=calib_k)
+    if needs_acc:
+        if builder is not None:
+            acc_fn = nonideal.make_accuracy_model(space, builder=builder,
+                                                  n_calib=n_calib,
+                                                  calib_k=calib_k)
+        else:
+            acc_fn = nonideal.make_accuracy_model(space, wa,
+                                                  n_calib=n_calib,
+                                                  calib_k=calib_k)
 
-    def metrics(genomes):
-        return evaluate_population(space, wa, genomes, constants, table)
+    if builder is not None:
+        def metrics(genomes):
+            return evaluate_population_joint(space, builder, genomes,
+                                             constants, table)
+    else:
+        def metrics(genomes):
+            return evaluate_population(space, wa, genomes, constants,
+                                       table)
 
     def score_full(genomes):
         m = metrics(genomes)
@@ -207,6 +229,8 @@ def make_traced_scorer(space: SearchSpace, wa: WorkloadArrays,
         s = per_workload_scores(m, first.kind, accuracy=acc)[:, w]
         bad = (~m.feasible_w[:, w]) | (m.area >
                                        first.area_constraint)
+        if first.min_accuracy > 0.0:
+            bad = bad | (acc[:, w] < first.min_accuracy)
         return jnp.where(bad, INFEASIBLE_PENALTY, s)
 
     return TracedScorer(score=score, feasible=feasible, score_w=score_w,
@@ -783,8 +807,23 @@ def run_scenario(scenario: Scenario,
     t0 = time.perf_counter()
     space = scenario.space()
     workloads = scenario.resolve_workloads()
-    wa = pack(workloads)
-    objective = make_objective(scenario.objective)
+    families = [w for w in workloads if isinstance(w, WorkloadFamily)]
+    is_joint = bool(families)
+    if is_joint:
+        if scenario.algorithm in ("random", "alg_compare"):
+            raise ValueError(
+                f"scenario {scenario.name!r}: joint co-search scenarios "
+                f"run the scan-compiled GA/NSGA-II engines; algorithm "
+                f"{scenario.algorithm!r} has no joint-genome path")
+        builder = make_workload_builder(space, workloads)
+        wa = None
+        wl_names = builder.names
+    else:
+        builder = None
+        wa = pack(workloads)
+        wl_names = wa.names
+    objective = make_objective(scenario.objective,
+                               min_accuracy=scenario.min_accuracy)
     if scenario.algorithm == "alg_compare":
         # Table 3 / §III-C1: six algorithms, per-algorithm hit-rate
         # statistics — a different result schema, same cache/artifact
@@ -800,7 +839,7 @@ def run_scenario(scenario: Scenario,
             "n_seeds": n_seeds,
             "budget": budget_dict,
             "calib": calib_dict,
-            "workloads": list(wa.names),
+            "workloads": list(wl_names),
             "seeds": {"count": n_seeds, "list": seeds},
             "cached": False,
         }
@@ -813,7 +852,8 @@ def run_scenario(scenario: Scenario,
     is_mo = isinstance(objective, MultiObjective)
     traced = make_traced_scorer(space, wa, objective,
                                 n_calib=scenario.n_calib,
-                                calib_k=scenario.calib_k)
+                                calib_k=scenario.calib_k,
+                                builder=builder)
 
     if is_mo:
         res = run_mo_search_batched(scenario, space, traced, seeds)
@@ -821,9 +861,15 @@ def run_scenario(scenario: Scenario,
         # ideal-point history's last row) — the seeds-block scalar
         best_scores = res.histories[:, -1, 0]
     else:
-        host_score_fn, evaluator = make_scorer(
-            space, wa, objective, n_calib=scenario.n_calib,
-            calib_k=scenario.calib_k)
+        if is_joint:
+            # the random path (the only consumer) is guarded off above;
+            # jitted traced closures serve any host-driven caller
+            host_score_fn = jax.jit(traced.score)
+            evaluator = jax.jit(traced.metrics)
+        else:
+            host_score_fn, evaluator = make_scorer(
+                space, wa, objective, n_calib=scenario.n_calib,
+                calib_k=scenario.calib_k)
         res = run_search_batched(scenario, space, traced, seeds,
                                  host_score_fn, evaluator)
         best_scores = np.asarray(res.best_scores)
@@ -865,10 +911,10 @@ def run_scenario(scenario: Scenario,
         "n_seeds": n_seeds,
         "budget": budget_dict,
         "calib": calib_dict,
-        "workloads": list(wa.names),
+        "workloads": list(wl_names),
         "best_score": float(best_scores[j_best]),
         "generalized": _design_metrics(space, traced, best_genome,
-                                       wa.names),
+                                       wl_names),
         # best seed's best-so-far trajectory (first objective for MO) +
         # every seed's, for the Fig. 4 convergence bands in summary.md
         "history": np.asarray(history).tolist(),
@@ -877,6 +923,23 @@ def run_scenario(scenario: Scenario,
         "sampling_time_s": getattr(res, "sampling_time_s", 0.0),
         "cached": False,
     }
+    if is_joint:
+        # which architecture the joint search chose (report section):
+        # arch slice of the best genome, decoded, plus the concrete
+        # model each family builds at those indices
+        g = np.asarray(best_genome)
+        decoded = space.decode(g)
+        chosen = {}
+        for f in families:
+            idx = [int(g[space.index(f"{f.name}.{p.name}")])
+                   for p in f.params]
+            chosen[f.name] = f.build_at(idx).name
+        result["joint"] = {
+            "families": [f.name for f in families],
+            "arch_params": {n: decoded[n] for n in space.arch_names},
+            "chosen_models": chosen,
+            "n_arch_dims": space.n_arch,
+        }
     if is_mo:
         # the direct-searched front (Fig. 9 by NSGA-II)
         result["pareto"] = pareto_block

@@ -18,8 +18,9 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, List, Tuple
 
-from ..core import (PAPER_4, PAPER_9, SearchSpace, Workload,
-                    from_arch_config, get_space, get_workload_set)
+from ..core import (PAPER_4, PAPER_9, SearchSpace, Workload, WorkloadFamily,
+                    from_arch_config, get_family, get_space,
+                    get_workload_set, joint_space)
 from ..core.search_space import reduced_rram_space
 
 # Largest paper workload: the single-workload (specialized) design point
@@ -86,7 +87,7 @@ class Scenario:
     seed: int = 0
     seq: int = 256                 # sequence length for arch workloads
     tech_variable: bool = False
-    workload_source: str = "paper"  # "paper" | "archs"
+    workload_source: str = "paper"  # "paper" | "archs" | "family"
     specific_baselines: bool = True  # per-workload specific searches
     # §III-C1: search the exhaustively-enumerable reduced RRAM space
     # (Xbar_rows, Xbar_cols, C_per_tile, Bits_cell) instead of the full
@@ -105,20 +106,36 @@ class Scenario:
     # objectives.
     n_calib: int = 32
     calib_k: int = 256
+    # Hard per-workload accuracy floor (joint co-search counterweight):
+    # designs whose non-ideality-degraded accuracy on any workload
+    # falls below this bar are penalized infeasible. 0.0 = off.
+    min_accuracy: float = 0.0
     paper_ref: str = ""
     description: str = ""
 
     def space(self) -> SearchSpace:
         if self.reduced_space:
             assert self.mem == "rram", "the §III-C1 reduced space is RRAM"
-            return reduced_rram_space()
-        return get_space(self.mem, self.tech_variable)
+            base = reduced_rram_space()
+        else:
+            base = get_space(self.mem, self.tech_variable)
+        if self.workload_source == "family":
+            families = [w for w in self.resolve_workloads()
+                        if isinstance(w, WorkloadFamily)]
+            return joint_space(base, families)
+        return base
 
     def resolve_workloads(self) -> List[Workload]:
         if self.workload_source == "archs":
             from ..configs import get_config
             return [from_arch_config(get_config(a), seq=self.seq)
                     for a in self.workloads]
+        if self.workload_source == "family":
+            # family names resolve to WorkloadFamily; fixed workload
+            # names may be mixed in (constant slots of the joint space)
+            from ..core.workloads import FAMILY_NAMES, get_workload
+            return [get_family(n) if n in FAMILY_NAMES else get_workload(n)
+                    for n in self.workloads]
         return get_workload_set(self.workloads)
 
 
@@ -252,6 +269,45 @@ def _build_registry() -> Dict[str, Scenario]:
                          "fabrication-cost front searched directly "
                          "with device-resident NSGA-II"),
         ))
+    # Joint workload-architecture × hardware co-search (ROADMAP's
+    # "biggest scenario unlock", cf. CIMNAS/NAX): the genome carries
+    # trailing architecture dimensions (depth, width, heads/FF ratio,
+    # per-layer weight bits); a traced workload builder turns the arch
+    # slice into padded layer tensors inside the same compiled scan.
+    # The min_accuracy bar (scored by the noise-coupled accuracy model)
+    # is what keeps the search from collapsing to the smallest/lowest-
+    # precision architecture.
+    add(Scenario(
+        name="joint_rram_resnet_family", mem="rram",
+        workloads=("resnet_family",), algorithm="fourphase",
+        objective="edap:mean", workload_source="family",
+        specific_baselines=False, min_accuracy=0.60,
+        paper_ref="(beyond paper: joint co-search)",
+        description=("Joint RRAM hardware × ResNet-architecture "
+                     "co-search (depth/width/per-layer weight bits in "
+                     "the genome) under a 60% accuracy floor"),
+    ))
+    add(Scenario(
+        name="joint_rram_vit_family", mem="rram",
+        workloads=("vit_family",), algorithm="fourphase",
+        objective="edap:mean", workload_source="family",
+        specific_baselines=False, min_accuracy=0.58,
+        paper_ref="(beyond paper: joint co-search)",
+        description=("Joint RRAM hardware × ViT-architecture co-search "
+                     "(depth/heads/FF ratio/weight bits in the genome) "
+                     "under a 58% accuracy floor"),
+    ))
+    add(Scenario(
+        name="joint_rram_mo", mem="rram",
+        workloads=("resnet_family",), algorithm="fourphase",
+        objective="edap:mean+acc_loss:mean", workload_source="family",
+        specific_baselines=False,
+        paper_ref="(beyond paper: joint co-search)",
+        description=("Joint RRAM × ResNet-architecture multi-objective "
+                     "co-search: EDAP × accuracy-loss front via "
+                     "device-resident NSGA-II, architecture choice "
+                     "read off each front design"),
+    ))
     return reg
 
 

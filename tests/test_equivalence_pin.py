@@ -1,0 +1,223 @@
+"""Equivalence pin for the genome-slice refactor.
+
+``evaluate_population`` was refactored onto a shared ``_cost_core`` so
+the joint (padded + masked, per-layer-wbits) path could reuse it. The
+fixed-workload path must stay BIT-IDENTICAL: this module carries a
+verbatim copy of the pre-refactor function and asserts
+
+  * CostMetrics bitwise equality over every registered scenario's
+    (space, workload-set) configuration, and
+  * bitwise-identical search trajectories (best genomes, scores,
+    histories) through the refactored traced scorer at smoke budget.
+
+If a cost-model change is *intentional*, update the reference copy here
+in the same commit and say so in the message.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import batched_joint_search, make_objective, pack
+from repro.core.cost_model import (CostMetrics, HWConstants, _resolve,
+                                   evaluate_population)
+from repro.core.search_space import (TECH_COST_ALPHA, TECH_NODES_NM,
+                                     TECH_VMIN, TECH_VMAX, V_NOM)
+from repro.experiments import get_scenario, make_traced_scorer, scenario_names
+
+# ---------------------------------------------------------------------------
+# verbatim pre-refactor evaluate_population (commit eac9b20 lineage)
+# ---------------------------------------------------------------------------
+
+
+def _reference_evaluate_population(space, wl, genomes,
+                                   constants=HWConstants(),
+                                   table=None) -> CostMetrics:
+    c = constants
+    if table is None:
+        table = jnp.asarray(space.value_table())
+    p = _resolve(space, table, genomes)
+    is_rram = space.mem_type == "rram"
+
+    rows, cols = p["xbar_rows"], p["xbar_cols"]
+    n_xb = p["c_per_tile"] * p["t_per_router"] * p["g_per_chip"]
+    bits_cell = p["bits_cell"]
+    cpw = jnp.ceil(c.weight_bits / bits_cell)          # cells per weight
+
+    tech_i = p["tech_idx"].astype(jnp.int32)
+    tech_nm = jnp.asarray(TECH_NODES_NM)[tech_i]
+    vmin = jnp.asarray(TECH_VMIN)[tech_i]
+    vmax = jnp.asarray(TECH_VMAX)[tech_i]
+    v_op = vmin + p["v_op_step"] * (vmax - vmin)
+    tech_r = tech_nm / 32.0
+    v_scale = (v_op / V_NOM) ** 2
+    e_scale = tech_r * v_scale
+    e_scale_adc = jnp.sqrt(tech_r) * v_scale
+    area_scale = jnp.maximum(tech_r ** 2, c.mem_area_scale_floor)
+    area_scale_analog = jnp.maximum(tech_r, c.mem_area_scale_floor)
+    min_cycle = (c.base_min_cycle_ns * 1e-9 * tech_r
+                 * ((1.0 - 0.3) / jnp.maximum(v_op - 0.3, 0.05)) ** 1.3)
+    t_cycle = jnp.maximum(p["t_cycle_ns"] * 1e-9, min_cycle)
+
+    M = wl.flat_layers[None, :, 0]   # (1, Ltot)
+    K = wl.flat_layers[None, :, 1]
+    N = wl.flat_layers[None, :, 2]
+    seg_onehot = jax.nn.one_hot(wl.seg_ids, wl.n_workloads,
+                                dtype=jnp.float32)        # (Ltot, W)
+    r_ = rows[:, None]
+    c_ = cols[:, None]
+    cpw_ = cpw[:, None]
+
+    n_xb_row = jnp.ceil(K / r_)
+    n_xb_col = jnp.ceil(N * cpw_ / c_)
+    n_xb_layer = n_xb_row * n_xb_col
+
+    capacity_cells = n_xb * rows * cols                          # (P,)
+    mapped_xbars = n_xb_layer @ seg_onehot                       # (P, W)
+    extra_w = jnp.maximum(
+        wl.stored_weights[None, :]
+        - ((K * N) @ seg_onehot), 0.0)                           # (P, W)
+    mapped_xbars = mapped_xbars + jnp.ceil(
+        extra_w * cpw[:, None] / (rows * cols)[:, None])
+    mapped_cells = mapped_xbars * (rows * cols)[:, None]         # (P, W)
+    cap_ok = mapped_xbars <= n_xb[:, None]
+    feasible_w = cap_ok if is_rram else jnp.ones_like(cap_ok, bool)
+    feasible = jnp.all(feasible_w, axis=1)
+    dup = jnp.clip(jnp.floor(n_xb[:, None] /
+                             jnp.maximum(mapped_xbars, 1.0)),
+                   1.0, c.max_duplication)
+    if not is_rram:
+        dup = jnp.ones_like(dup)
+
+    bitmacs = M * 8.0 * K * N * cpw_
+    conversions = M * 8.0 * n_xb_row * (N * cpw_)
+    act_bytes = M * (K + N)
+
+    e_mac = c.e_mac_rram if is_rram else c.e_mac_sram
+    hops = 1.0 + jnp.log2(p["g_per_chip"])[:, None]
+    e_layer_dig = (bitmacs * e_mac + 2.0 * act_bytes * c.e_buf
+                   + act_bytes * c.e_router * hops)
+    e_layer_adc = conversions * c.e_adc
+
+    tmux = jnp.maximum(jnp.ceil(n_xb_layer / n_xb[:, None]), 1.0)
+    l_compute = M * 8.0 * c_ * t_cycle[:, None] * tmux
+    noc_bw = (c.noc_bytes_per_cycle * p["g_per_chip"] / t_cycle)
+    l_noc = act_bytes / noc_bw[:, None]
+
+    glb_bytes = p["glb_kb"][:, None] * 1024.0
+    spill = jnp.maximum(act_bytes - glb_bytes, 0.0)
+    e_spill = spill * c.e_dram
+    l_spill = spill / c.dram_bw
+
+    def sum_l(x):                                               # (P, W)
+        return x @ seg_onehot
+    E = (sum_l(e_layer_dig) * e_scale[:, None]
+         + sum_l(e_layer_adc) * e_scale_adc[:, None]
+         + sum_l(e_spill))
+    L = sum_l(l_compute) / dup + sum_l(l_noc + l_spill)
+
+    if not is_rram:
+        swap_frac = jnp.clip(
+            1.0 - capacity_cells[:, None] / jnp.maximum(mapped_cells, 1.0),
+            0.0, 1.0)
+        swapped = wl.stored_weights[None, :] * swap_frac        # bytes
+        E = E + swapped * c.e_dram
+        L = L + swapped / c.dram_bw
+
+    p_static = (n_xb * c.p_static_xbar
+                + p["t_per_router"] * p["g_per_chip"] * c.p_static_tile)
+    E = E + p_static[:, None] * L * e_scale[:, None]
+
+    f2_mm2 = (32.0e-6) ** 2
+    cell_f2 = c.cell_f2_rram if is_rram else c.cell_f2_sram
+    macro_dig = rows * cols * cell_f2 * f2_mm2
+    macro_ana = c.adc_area_mm2 + rows * c.driver_area_per_row_mm2
+    tile_dig = p["c_per_tile"] * macro_dig + c.tile_buf_area_mm2
+    tile_ana = p["c_per_tile"] * macro_ana
+    group_dig = p["t_per_router"] * tile_dig + c.router_area_mm2
+    group_ana = p["t_per_router"] * tile_ana
+    glb_area = (p["glb_kb"] / 1024.0) / c.glb_mb_per_mm2
+    A = 1.10 * (
+        (p["g_per_chip"] * group_dig + glb_area) * area_scale
+        + p["g_per_chip"] * group_ana * area_scale_analog)
+
+    cost = jnp.asarray(TECH_COST_ALPHA)[tech_i] * A
+    return CostMetrics(energy=E, latency=L, area=A, feasible=feasible,
+                       cost=cost, feasible_w=feasible_w)
+
+
+# ---------------------------------------------------------------------------
+# registry regression: every scenario's cost config is bit-identical
+# ---------------------------------------------------------------------------
+
+def _fixed_workload_configs():
+    """Unique (space, workload-set) configurations over the registry,
+    family scenarios excluded (they have no pre-refactor counterpart)."""
+    seen, out = set(), []
+    for name in scenario_names():
+        sc = get_scenario(name)
+        if sc.workload_source == "family":
+            continue
+        key = (sc.mem, sc.tech_variable, sc.reduced_space,
+               sc.workload_source, sc.workloads, sc.seq)
+        if key in seen:
+            continue
+        seen.add(key)
+        out.append((name, sc))
+    return out
+
+
+@pytest.mark.parametrize("name,sc", _fixed_workload_configs(),
+                         ids=lambda v: v if isinstance(v, str) else "")
+def test_registry_cost_metrics_bit_identical(name, sc):
+    space = sc.space()
+    wa = pack(sc.resolve_workloads())
+    rng = np.random.default_rng(hash(name) % (2**32))
+    g = jnp.asarray(np.stack(
+        [rng.integers(0, space.cardinalities, size=space.n_params)
+         for _ in range(32)]).astype(np.int32))
+    m_new = evaluate_population(space, wa, g)
+    m_ref = _reference_evaluate_population(space, wa, g)
+    for field, a, b in zip(CostMetrics._fields, m_new, m_ref):
+        assert np.array_equal(np.asarray(a), np.asarray(b)), (name, field)
+
+
+# ---------------------------------------------------------------------------
+# trajectory pin: the refactored traced scorer drives the compiled
+# search to bitwise-identical results
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("scenario", ["rram_smoke", "sram_smoke"])
+def test_search_trajectory_bit_identical(scenario):
+    sc = get_scenario(scenario)
+    space = sc.space()
+    wa = pack(sc.resolve_workloads())
+    obj = make_objective(sc.objective)
+    table = jnp.asarray(space.value_table())
+
+    traced = make_traced_scorer(space, wa, obj)
+
+    def ref_score(g):
+        return obj(_reference_evaluate_population(space, wa, g,
+                                                  HWConstants(), table))
+
+    def ref_feasible(g):
+        return _reference_evaluate_population(space, wa, g, HWConstants(),
+                                              table).feasible
+
+    b = sc.smoke_budget
+    keys = jnp.stack([jax.random.PRNGKey(s) for s in (0, 1)])
+    kw = dict(p_h=b.p_h, p_e=b.p_e, p_ga=b.p_ga,
+              generations_per_phase=b.generations)
+    feas_new = traced.feasible if sc.mem == "rram" else None
+    feas_ref = ref_feasible if sc.mem == "rram" else None
+    r_new = batched_joint_search(keys, space, traced.score,
+                                 feasible_fn=feas_new, **kw)
+    r_ref = batched_joint_search(keys, space, ref_score,
+                                 feasible_fn=feas_ref, **kw)
+    np.testing.assert_array_equal(np.asarray(r_new.best_genomes),
+                                  np.asarray(r_ref.best_genomes))
+    np.testing.assert_array_equal(np.asarray(r_new.best_scores),
+                                  np.asarray(r_ref.best_scores))
+    np.testing.assert_array_equal(np.asarray(r_new.histories),
+                                  np.asarray(r_ref.histories))

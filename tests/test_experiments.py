@@ -496,6 +496,20 @@ def test_summary_renders_table3_section():
 # README contract: reproduce-table commands == registry names
 # ---------------------------------------------------------------------------
 
+def test_cli_unknown_name_exits_2_with_listing(capsys):
+    """Unknown scenario/workload names exit 2 with the valid choices
+    listed on stderr — no traceback (satellite of the joint-search PR:
+    KeyError/ValueError both route through the clean error path)."""
+    from repro.experiments.__main__ import main
+    for argv in (["show", "--scenario", "nope"],
+                 ["run", "--scenario", "nope"]):
+        assert main(argv) == 2
+        err = capsys.readouterr().err
+        assert "unknown scenario 'nope'" in err
+        assert "rram_small_set" in err
+        assert "Traceback" not in err
+
+
 def test_readme_commands_match_registry():
     readme = open(os.path.join(REPO_ROOT, "README.md")).read()
     commanded = set(re.findall(r"--scenario\s+(\S+)", readme))

@@ -1,0 +1,94 @@
+"""Hypothesis property tests for the traced workload builder.
+
+For any genome, the builder's gathered layer tensor must agree exactly
+with the host-side oracle (``WorkloadFamily.build_at``) on the derived
+quantities the cost model consumes — MACs, active weights, largest-layer
+weights — computed under the validity mask, plus stored weights and the
+per-layer weight-bit vector.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st
+
+from repro.core import get_space, joint_space
+from repro.core.workloads import (get_workload, make_workload_builder,
+                                  resnet_family, vit_family)
+
+SETTINGS = dict(max_examples=20, deadline=None)
+
+# module-level fixtures: families build their combo tables once
+_FAMS = {"resnet_family": resnet_family(), "vit_family": vit_family()}
+_FIXED = get_workload("alexnet")
+_SPACES = {}
+_BUILDERS = {}
+for _n, _f in _FAMS.items():
+    _sp = joint_space(get_space("rram"), [_f])
+    _SPACES[_n] = _sp
+    # mixed slots: one family + one fixed workload
+    _BUILDERS[_n] = make_workload_builder(_sp, [_f, _FIXED])
+
+
+@st.composite
+def joint_genomes(draw, space, n=4):
+    cards = space.cardinalities
+    rows = [
+        [draw(st.integers(0, int(c) - 1)) for c in cards]
+        for _ in range(n)
+    ]
+    return np.asarray(rows, np.int32)
+
+
+def _masked_stats(layers, mask):
+    layers = np.asarray(layers, np.float64)
+    mask = np.asarray(mask, np.float64)
+    prod = layers[:, 0] * layers[:, 1] * layers[:, 2]
+    wts = layers[:, 1] * layers[:, 2]
+    return (float(np.sum(mask * prod)), float(np.sum(mask * wts)),
+            float(np.max(mask * wts)))
+
+
+def _oracle_stats(w):
+    l32 = w.layers.astype(np.float32)
+    return _masked_stats(l32, np.ones((l32.shape[0],)))
+
+
+@settings(**SETTINGS)
+@given(fam_name=st.sampled_from(sorted(_FAMS)), data=st.data())
+def test_builder_layer_tensor_matches_host_oracle(fam_name, data):
+    fam = _FAMS[fam_name]
+    sp = _SPACES[fam_name]
+    builder = _BUILDERS[fam_name]
+    g = data.draw(joint_genomes(sp))
+    wt = builder(jnp.asarray(g))
+    for p in range(g.shape[0]):
+        idx = g[p, sp.n_hw:]
+        w = fam.build_at(idx)
+        # exact equality: macs / active_weights / largest_layer_weights
+        got = _masked_stats(np.asarray(wt.layers)[p, 0],
+                            np.asarray(wt.mask)[p, 0])
+        assert got == _oracle_stats(w)
+        assert int(np.asarray(wt.n_layers)[p, 0]) == w.n_layers
+        assert np.asarray(wt.stored)[p, 0] == np.float32(w.stored_weights)
+        np.testing.assert_array_equal(
+            np.asarray(wt.wbits)[p, 0, : w.n_layers],
+            w.layer_weight_bits.astype(np.float32))
+        # the fixed slot never depends on the genome
+        assert _masked_stats(np.asarray(wt.layers)[p, 1],
+                             np.asarray(wt.mask)[p, 1]) \
+            == _oracle_stats(_FIXED)
+
+
+@settings(**SETTINGS)
+@given(data=st.data())
+def test_builder_base_accuracy_matches_host(data):
+    fam = _FAMS["resnet_family"]
+    sp = _SPACES["resnet_family"]
+    g = data.draw(joint_genomes(sp))
+    wt = _BUILDERS["resnet_family"](jnp.asarray(g))
+    for p in range(g.shape[0]):
+        idx = g[p, sp.n_hw:]
+        assert np.asarray(wt.base_acc)[p, 0] == pytest.approx(
+            fam.accuracy_at(idx), abs=1e-6)

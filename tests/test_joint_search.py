@@ -1,0 +1,271 @@
+"""Joint workload-architecture x hardware co-search (genome-slice path).
+
+The genome carries trailing architecture dimensions; a traced
+WorkloadBuilder turns the arch slice into padded layer tensors inside
+the compiled scan. These tests cover the builder/evaluator layer, the
+joint scenarios end-to-end at smoke budget, and the acceptance claim:
+the constrained-EDAP-optimal architecture depends on the hardware
+operating point.
+"""
+import dataclasses
+import itertools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (evaluate_population, evaluate_population_joint,
+                        get_space, get_workload, get_workload_set,
+                        joint_space, make_joint_evaluator, make_objective,
+                        pack)
+from repro.core.workloads import (PAPER_4, FAMILY_NAMES, get_family,
+                                  make_workload_builder, resnet_family,
+                                  vit_family)
+from repro.experiments import get_scenario, make_traced_scorer, run_scenario
+from repro.experiments.report import render_markdown
+
+
+def _masked_stats(layers, mask):
+    """(macs, active_weights, largest_layer_weights) from a padded
+    (L, 3) tensor + mask, in float64."""
+    layers = np.asarray(layers, np.float64)
+    mask = np.asarray(mask, np.float64)
+    prod = layers[:, 0] * layers[:, 1] * layers[:, 2]
+    wts = layers[:, 1] * layers[:, 2]
+    return (float(np.sum(mask * prod)), float(np.sum(mask * wts)),
+            float(np.max(mask * wts)))
+
+
+def _oracle_stats(w):
+    """The same stats from a host Workload, through the float32 cast
+    the builder tables apply."""
+    l32 = w.layers.astype(np.float32)
+    m = np.ones((l32.shape[0],))
+    return _masked_stats(l32, m)
+
+
+# ---------------------------------------------------------------------------
+# space layout
+# ---------------------------------------------------------------------------
+
+def test_joint_space_layout():
+    base = get_space("rram")
+    fam = resnet_family()
+    sp = joint_space(base, [fam])
+    assert sp.n_arch == len(fam.params)
+    assert sp.n_hw == base.n_params
+    assert sp.hw_names == base.names
+    assert sp.arch_names == tuple(f"resnet_family.{p.name}"
+                                  for p in fam.params)
+    assert sp.size == base.size * fam.n_combos
+    # genome slices partition the genome
+    g = np.arange(sp.n_params)[None]
+    np.testing.assert_array_equal(
+        np.concatenate([sp.hw_slice(g), sp.arch_slice(g)], axis=1), g)
+
+
+def test_joint_space_zero_families_is_base():
+    base = get_space("sram")
+    sp = joint_space(base, [])
+    assert sp.n_arch == 0 and sp.names == base.names
+
+
+# ---------------------------------------------------------------------------
+# traced builder vs host oracle (exhaustive; the hypothesis version in
+# test_joint_property.py samples mixed slots)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("family_name", FAMILY_NAMES)
+def test_builder_matches_host_oracle_exhaustive(family_name):
+    fam = get_family(family_name)
+    sp = joint_space(get_space("rram"), [fam])
+    builder = make_workload_builder(sp, [fam])
+    cards = fam.cardinalities
+    combos = np.asarray(list(itertools.product(*[range(c) for c in cards])),
+                        np.int32)
+    hw = np.zeros((combos.shape[0], sp.n_hw), np.int32)
+    g = np.concatenate([hw, combos], axis=1)
+    wt = builder(jnp.asarray(g))
+    layers = np.asarray(wt.layers)
+    mask = np.asarray(wt.mask)
+    wbits = np.asarray(wt.wbits)
+    for i, idx in enumerate(combos):
+        w = fam.build_at(idx)
+        assert int(np.asarray(wt.n_layers)[i, 0]) == w.n_layers
+        assert np.asarray(wt.stored)[i, 0] == np.float32(w.stored_weights)
+        assert np.asarray(wt.base_acc)[i, 0] == pytest.approx(
+            fam.accuracy_at(idx), abs=1e-6)
+        # layers exact under the mask; pad rows benign (1.0, masked out)
+        n = w.n_layers
+        np.testing.assert_array_equal(layers[i, 0, :n],
+                                      w.layers.astype(np.float32))
+        np.testing.assert_array_equal(mask[i, 0, :n], 1.0)
+        np.testing.assert_array_equal(mask[i, 0, n:], 0.0)
+        np.testing.assert_array_equal(wbits[i, 0, :n],
+                                      w.layer_weight_bits.astype(np.float32))
+        # derived stats exact (the property the cost model consumes)
+        got = _masked_stats(layers[i, 0], mask[i, 0])
+        assert got == _oracle_stats(w)
+
+
+def test_builder_fixed_slot_constant_across_genomes():
+    fam = resnet_family()
+    fixed = get_workload("alexnet")
+    sp = joint_space(get_space("rram"), [fam])
+    builder = make_workload_builder(sp, [fam, fixed])
+    assert builder.names == ("resnet_family", "alexnet")
+    rng = np.random.default_rng(0)
+    g = np.stack([rng.integers(0, sp.cardinalities, size=sp.n_params)
+                  for _ in range(5)]).astype(np.int32)
+    wt = builder(jnp.asarray(g))
+    # slot 1 (fixed) is identical for every genome and matches the host
+    for i in range(5):
+        got = _masked_stats(np.asarray(wt.layers)[i, 1],
+                            np.asarray(wt.mask)[i, 1])
+        assert got == _oracle_stats(fixed)
+        assert np.asarray(wt.wbits)[i, 1, 0] == 8.0
+
+
+# ---------------------------------------------------------------------------
+# joint evaluator
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mem", ["rram", "sram"])
+def test_joint_evaluator_degenerate_matches_flat(mem):
+    """Zero arch dims: the joint (padded+mask) path reproduces the flat
+    ragged path up to summation order."""
+    sp = get_space(mem)
+    wls = get_workload_set(PAPER_4)
+    wa = pack(wls)
+    builder = make_workload_builder(sp, wls)
+    rng = np.random.default_rng(1)
+    g = np.stack([rng.integers(0, sp.cardinalities, size=sp.n_params)
+                  for _ in range(16)]).astype(np.int32)
+    m_flat = evaluate_population(sp, wa, jnp.asarray(g))
+    m_joint = evaluate_population_joint(sp, builder, jnp.asarray(g))
+    for a, b in zip(m_flat, m_joint):
+        np.testing.assert_allclose(np.asarray(a, np.float64),
+                                   np.asarray(b, np.float64),
+                                   rtol=1e-5, atol=0)
+
+
+def test_joint_evaluator_lower_bits_cost_less():
+    """Per-layer weight bits reach the cost model: an all-4-bit ResNet
+    maps to fewer cells than the same ResNet at 8 bits, so energy and
+    mapped area pressure drop."""
+    fam = resnet_family()
+    sp = joint_space(get_space("rram"), [fam])
+    ev = make_joint_evaluator(sp, make_workload_builder(sp, [fam]))
+    hw = [c // 2 for c in sp.cardinalities[:sp.n_hw]]
+    # arch: depth=18, wm=1.0, (wbits_early, wbits_late) 4/4 vs 8/8
+    g4 = np.asarray([hw + [1, 1, 0, 0]], np.int32)
+    g8 = np.asarray([hw + [1, 1, 1, 1]], np.int32)
+    m4, m8 = ev(jnp.asarray(g4)), ev(jnp.asarray(g8))
+    assert float(m4.energy[0, 0]) < float(m8.energy[0, 0])
+    assert float(m4.latency[0, 0]) <= float(m8.latency[0, 0])
+
+
+def test_joint_evaluator_shapes_and_positive():
+    fam = vit_family()
+    sp = joint_space(get_space("rram"), [fam])
+    ev = make_joint_evaluator(sp, make_workload_builder(sp, [fam]))
+    rng = np.random.default_rng(2)
+    g = np.stack([rng.integers(0, sp.cardinalities, size=sp.n_params)
+                  for _ in range(8)]).astype(np.int32)
+    m = ev(jnp.asarray(g))
+    assert m.energy.shape == (8, 1) and m.latency.shape == (8, 1)
+    assert m.area.shape == (8,)
+    assert np.all(np.asarray(m.energy) > 0)
+    assert np.all(np.asarray(m.latency) > 0)
+    assert np.all(np.asarray(m.area) > 0)
+
+
+# ---------------------------------------------------------------------------
+# acceptance: the chosen architecture depends on the hardware operating
+# point (the joint search is not separable into hw-then-arch)
+# ---------------------------------------------------------------------------
+
+def test_optimal_arch_differs_across_hw_operating_points():
+    fam = resnet_family()
+    sp = joint_space(get_space("rram"), [fam])
+    obj = make_objective("edap:mean", min_accuracy=0.60)
+    traced = make_traced_scorer(sp, None, obj,
+                                builder=make_workload_builder(sp, [fam]))
+    score = jax.jit(traced.score)
+    arch = np.asarray(list(itertools.product(
+        *[range(c) for c in sp.cardinalities[sp.n_hw:]])), np.int32)
+
+    def best_arch(hw_idx):
+        hw = np.tile(np.asarray(hw_idx, np.int32), (arch.shape[0], 1))
+        s = np.asarray(score(jnp.asarray(
+            np.concatenate([hw, arch], axis=1))))
+        feas = s < 1e29
+        assert feas.any(), "operating point admits no feasible arch"
+        return tuple(arch[int(np.argmin(np.where(feas, s, np.inf)))])
+
+    # two pinned operating points of the full RRAM space (indices into
+    # bits_cell, xbar_rows, xbar_cols, c_per_tile, t_per_router,
+    # g_per_chip, glb_kb, t_cycle_ns, v_op_step)
+    a = best_arch((1, 1, 2, 4, 0, 7, 3, 1, 5))
+    b = best_arch((0, 3, 0, 2, 1, 7, 1, 4, 0))
+    assert a != b, (a, b)
+    # both satisfy the accuracy bar they were selected under
+    for chosen in (a, b):
+        assert fam.accuracy_at(chosen) >= 0.60
+
+
+# ---------------------------------------------------------------------------
+# scenarios end-to-end (smoke budget)
+# ---------------------------------------------------------------------------
+
+def _smoke(name):
+    sc = get_scenario(name)
+    return dataclasses.replace(sc, budget=sc.smoke_budget)
+
+
+def test_joint_scenarios_registered():
+    for name in ("joint_rram_resnet_family", "joint_rram_vit_family",
+                 "joint_rram_mo"):
+        sc = get_scenario(name)
+        assert sc.workload_source == "family"
+        assert not sc.specific_baselines
+        assert sc.space().n_arch > 0
+    assert get_scenario("joint_rram_resnet_family").min_accuracy == 0.60
+    assert get_scenario("joint_rram_vit_family").min_accuracy == 0.58
+    assert "+" in get_scenario("joint_rram_mo").objective
+
+
+def test_joint_resnet_scenario_smoke_end_to_end():
+    res = run_scenario(_smoke("joint_rram_resnet_family"), write=False)
+    j = res["joint"]
+    assert j["families"] == ["resnet_family"]
+    assert j["n_arch_dims"] == 4
+    assert set(j["arch_params"]) == {
+        "resnet_family.depth", "resnet_family.width_mult",
+        "resnet_family.wbits_early", "resnet_family.wbits_late"}
+    assert j["chosen_models"]["resnet_family"].startswith("resnet_d")
+    # the accuracy floor held for the reported design
+    acc = res["generalized"]["per_workload"]["resnet_family"]["accuracy"]
+    assert acc >= 0.60
+    md = render_markdown(res)
+    assert "Chosen workload architecture" in md
+    assert "resnet_family.depth" in md
+
+
+def test_joint_mo_scenario_smoke_searched_front():
+    res = run_scenario(_smoke("joint_rram_mo"), write=False)
+    assert res["joint"]["families"] == ["resnet_family"]
+    p = res["pareto"]
+    assert p["searched"] and p["axes"] == ["edap", "acc_loss"]
+    assert len(p["front"]) >= 1
+    # front designs carry the arch dimensions in their decoded design
+    assert "resnet_family.depth" in p["front"][0]["design"]
+
+
+def test_joint_guard_rejects_unsupported_algorithms():
+    sc = get_scenario("joint_rram_resnet_family")
+    for alg in ("random", "alg_compare"):
+        bad = dataclasses.replace(sc, algorithm=alg)
+        with pytest.raises(ValueError, match="joint"):
+            run_scenario(bad, write=False)

@@ -1,8 +1,11 @@
+import numpy as np
 import pytest
 
 from repro.configs import ARCH_IDS, get_config
-from repro.core.workloads import (PAPER_4, PAPER_9, from_arch_config,
-                                  get_workload, get_workload_set, pack)
+from repro.core.workloads import (FAMILY_NAMES, PAPER_4, PAPER_9,
+                                  from_arch_config, get_family,
+                                  get_workload, get_workload_set, pack,
+                                  resnet_family, vit_family)
 
 
 def test_known_weight_counts():
@@ -58,3 +61,113 @@ def test_moe_stored_exceeds_active():
     cfg = get_config("mixtral_8x22b")
     wl = from_arch_config(cfg, seq=128)
     assert wl.stored_weights > 2.0 * wl.active_weights
+
+
+def test_from_arch_config_macs_scale_with_seq():
+    cfg = get_config(ARCH_IDS[0])
+    m128 = from_arch_config(cfg, seq=128).macs
+    m256 = from_arch_config(cfg, seq=256).macs
+    # GEMM MACs are linear in sequence length at batch 1
+    assert m256 == pytest.approx(2.0 * m128, rel=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# zoo builders vs published model statistics
+# ---------------------------------------------------------------------------
+
+def test_zoo_macs_match_published():
+    # published multiply-accumulate counts (one 224x224 image / one
+    # sequence); the GEMM export is within a few percent of the
+    # conv+fc analytic numbers
+    r18 = get_workload("resnet18")
+    assert 1.7e9 < r18.macs < 1.9e9           # ~1.8 GMACs
+    r50 = get_workload("resnet50")
+    assert 3.5e9 < r50.macs < 4.3e9           # ~4.1 GMACs (conv+fc)
+    vgg = get_workload("vgg16")
+    assert 1.50e10 < vgg.macs < 1.60e10       # ~15.5 GMACs
+    vit = get_workload("vit_b16")
+    assert 1.6e10 < vit.macs < 1.85e10        # ~17.6 GMACs
+    mb = get_workload("mobilebert")
+    assert 3e9 < mb.macs < 6e9                # seq-128 bottleneck stack
+
+
+def test_zoo_weight_counts_match_published():
+    r50 = get_workload("resnet50")
+    assert abs(r50.active_weights - 25.6e6) / 25.6e6 < 0.05
+    vit = get_workload("vit_b16")
+    assert abs(vit.active_weights - 86e6) / 86e6 < 0.05
+    mb = get_workload("mobilebert")
+    assert 2e7 < mb.active_weights < 4e7
+
+
+def test_layer_weight_bits_default():
+    w = get_workload("resnet18")
+    assert w.weight_bits is None
+    np.testing.assert_array_equal(w.layer_weight_bits, 8.0)
+    assert w.layer_weight_bits.shape == (w.n_layers,)
+
+
+# ---------------------------------------------------------------------------
+# unknown-name error paths list the valid choices
+# ---------------------------------------------------------------------------
+
+def test_get_workload_unknown_lists_valid_names():
+    with pytest.raises(ValueError) as e:
+        get_workload("nope")
+    msg = str(e.value)
+    assert "unknown workload 'nope'" in msg
+    for n in ("alexnet", "resnet18", "vit_b16"):
+        assert n in msg
+
+
+def test_get_family_unknown_lists_valid_names():
+    with pytest.raises(ValueError) as e:
+        get_family("nope")
+    msg = str(e.value)
+    assert "unknown workload family 'nope'" in msg
+    for n in FAMILY_NAMES:
+        assert n in msg
+
+
+# ---------------------------------------------------------------------------
+# workload families (joint co-search)
+# ---------------------------------------------------------------------------
+
+def test_resnet_family_reproduces_resnet18():
+    fam = resnet_family()
+    # depth=18, width 1.0, 8/8-bit == the registered resnet18 layers
+    w = fam.build_at([1, 1, 1, 1])
+    np.testing.assert_array_equal(w.layers, get_workload("resnet18").layers)
+    np.testing.assert_array_equal(w.layer_weight_bits, 8.0)
+
+
+def test_vit_family_reproduces_vit_b16():
+    fam = vit_family()
+    # depth=12, heads=12, ff 4x, 8-bit == the registered vit_b16 layers
+    w = fam.build_at([1, 1, 1, 1])
+    np.testing.assert_array_equal(w.layers, get_workload("vit_b16").layers)
+
+
+def test_family_combos_match_mixed_radix_order():
+    fam = resnet_family()
+    cards = fam.cardinalities
+    assert fam.n_combos == int(np.prod(cards))
+    assert fam.n_layers == max(w.n_layers for w in fam.built())
+    combos = fam.combos()
+    # flat index of build_at indices follows itertools.product order
+    # (first param most significant) — the traced builder's contract
+    idx = [1, 0, 1, 0]
+    flat = 0
+    for i, c in zip(idx, cards):
+        flat = flat * c + i
+    w_direct = fam.build_at(idx)
+    w_flat = fam.build(combos[flat])
+    np.testing.assert_array_equal(w_direct.layers, w_flat.layers)
+    assert w_direct.name == w_flat.name
+
+
+def test_family_accuracy_monotone_in_depth_and_bits():
+    fam = resnet_family()
+    # deeper and higher-precision never decreases clean accuracy
+    assert fam.accuracy_at([3, 1, 1, 1]) > fam.accuracy_at([0, 1, 1, 1])
+    assert fam.accuracy_at([1, 1, 1, 1]) > fam.accuracy_at([1, 1, 0, 0])
