@@ -2,8 +2,8 @@
 
 Cells:
   experiments_eval_hot     — steady-state batched population evaluation
-                             through runner.make_scorer (the per-
-                             generation device computation): us/call
+                             through core.scoring.build_scorer (the
+                             per-generation device computation): us/call
                              and design-evaluations/s at the benchmark
                              population scale, PAPER_4 and PAPER_9.
   experiments_search_loop  — the tentpole metric: one full smoke-budget
@@ -37,6 +37,19 @@ Cells:
                              retained host per-genome loop at
                              population scale (gated speedup), plus
                              the scan-compiled edap_acc smoke search.
+  experiments_imc_fused    — the fused IMC fast path: the accuracy
+                             model routed through the fused
+                             gather/noise/GEMM/ADC evaluator
+                             (kernels/imc_fused.py, 'ref' backend on
+                             CPU) vs the retained host per-genome loop
+                             (gated speedup, the fused-path analogue
+                             of accuracy_model_speedup_x).
+  experiments_nsga_dominance — the tiled Deb dominance-count build
+                             (core.nsga.dominance_matrix_tiled,
+                             O(tile·N·D) live memory) vs the one-shot
+                             (N, N, D) broadcast at N=4096, D=8
+                             (gated speedup; ranks are bit-identical,
+                             tests/test_nsga.py).
   experiments_joint_eval   — the joint co-search hot path: the traced
                              workload builder + cost model evaluating
                              a population of (hardware, architecture)
@@ -65,11 +78,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (make_objective, pack, random_genomes,
-                        search_kernel, phase_schedule, FOUR_PHASES,
-                        joint_search)
-from repro.experiments import (get_scenario, make_scorer,
-                               make_traced_scorer, run_scenario)
+from repro.core import (ScorerSpec, build_scorer, make_objective, pack,
+                        random_genomes, search_kernel, phase_schedule,
+                        FOUR_PHASES, joint_search)
+from repro.experiments import get_scenario, run_scenario
 
 from .common import Bench
 
@@ -89,7 +101,9 @@ def experiments_eval_hot(pop: int = 512, iters: int = 30) -> None:
         sc = get_scenario(name)
         space = sc.space()
         wa = pack(sc.resolve_workloads())
-        score_fn, _ = make_scorer(space, wa, make_objective(sc.objective))
+        score_fn = build_scorer(
+            space, ScorerSpec(make_objective(sc.objective),
+                              workloads=wa)).score_host
         g = random_genomes(jax.random.PRNGKey(0), space, pop)
         score_fn(g).block_until_ready()  # compile
         t0 = time.perf_counter()
@@ -115,8 +129,8 @@ def experiments_search_loop(iters: int = 8) -> None:
     space = sc.space()
     wa = pack(sc.resolve_workloads())
     obj = make_objective(sc.objective)
-    traced = make_traced_scorer(space, wa, obj)
-    host_score, evaluator = make_scorer(space, wa, obj)
+    traced = build_scorer(space, ScorerSpec(obj, workloads=wa))
+    host_score, evaluator = traced.score_host, traced.evaluator
 
     def cap(g):
         return np.asarray(evaluator(jnp.asarray(g)).feasible)
@@ -165,8 +179,9 @@ def experiments_multiseed(n_seeds: int = 4, iters: int = 4) -> None:
     b = sc.budget
     space = sc.space()
     wa = pack(sc.resolve_workloads())
-    traced = make_traced_scorer(space, wa,
-                                make_objective(sc.objective))
+    traced = build_scorer(space,
+                          ScorerSpec(make_objective(sc.objective),
+                                     workloads=wa))
     cards = jnp.asarray(space.cardinalities.astype(np.float32))
     schedule = jnp.asarray(phase_schedule(FOUR_PHASES, b.generations))
 
@@ -216,7 +231,9 @@ def experiments_nsga_scan(iters: int = 8) -> None:
     b = SMOKE_BUDGET
     space = sc.space()
     wa = pack(sc.resolve_workloads())
-    traced = make_traced_scorer(space, wa, make_objective(sc.objective))
+    traced = build_scorer(space,
+                          ScorerSpec(make_objective(sc.objective),
+                                     workloads=wa))
     cards = jnp.asarray(space.cardinalities.astype(np.float32))
     schedule = jnp.asarray(phase_schedule(FOUR_PHASES, b.generations))
     init = rand_g(jax.random.PRNGKey(0), space, b.p_ga)
@@ -296,8 +313,9 @@ def experiments_accuracy_scored(pop: int = 64, host_pop: int = 8,
     smoke = get_scenario("rram_smoke")
     b = smoke.budget
     wa = pack(wls)
-    traced = make_traced_scorer(space, wa,
-                                make_objective(sc.objective))
+    traced = build_scorer(space,
+                          ScorerSpec(make_objective(sc.objective),
+                                     workloads=wa))
     cards = jnp.asarray(space.cardinalities.astype(np.float32))
     schedule = jnp.asarray(phase_schedule(FOUR_PHASES, b.generations))
     kern = jax.jit(functools.partial(
@@ -314,6 +332,87 @@ def experiments_accuracy_scored(pop: int = 64, host_pop: int = 8,
                  f"smoke_T{schedule.shape[0]}gen_edap_acc")
     _metric("accuracy_search_scan_s", t_search, higher_is_better=False,
             gated=False)
+
+
+def experiments_imc_fused(pop: int = 64, host_pop: int = 8,
+                          iters: int = 5) -> None:
+    """The fused IMC fast path (kernels/imc_fused.py): the accuracy
+    model routed through the single-pass gather + conductance-noise +
+    crossbar-tiled bit-plane GEMM + per-tile ADC evaluator, vs the
+    retained host per-genome loop. The 'ref' backend is the fused
+    dataflow in pure jnp — what the Pallas kernel computes, minus the
+    interpret-mode overhead that would dominate a CPU timing; on an
+    accelerator the 'pallas' route lowers the same pass. Host time is
+    measured on a small genome subset and scaled linearly (the loop is
+    embarrassingly per-genome). Gated like accuracy_model_speedup_x."""
+    from repro.core import nonideal
+
+    sc = get_scenario("rram_accuracy")
+    space = sc.space()
+    wls = sc.resolve_workloads()
+    model = jax.jit(nonideal.make_accuracy_model(space, wls,
+                                                 backend="ref"))
+    g = random_genomes(jax.random.PRNGKey(0), space, pop)
+    model(g).block_until_ready()  # compile
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = model(g)
+    out.block_until_ready()
+    t_dev = (time.perf_counter() - t0) / iters
+    gh = np.asarray(g[:host_pop])
+    nonideal.accuracy_proxy_host(space, gh, wls)  # warm per-rows jits
+    t0 = time.perf_counter()
+    nonideal.accuracy_proxy_host(space, gh, wls)
+    t_host = (time.perf_counter() - t0) * (pop / host_pop)
+    speedup = t_host / t_dev
+    Bench.record("experiments_imc_fused", t_dev,
+                 f"pop{pop}_host_loop_{speedup:.0f}x")
+    _metric("imc_fused_batched_s", t_dev, higher_is_better=False,
+            gated=False)
+    _metric("imc_fused_speedup_x", speedup, higher_is_better=True,
+            gated=True)
+
+
+def experiments_nsga_dominance(n: int = 4096, d: int = 8,
+                               iters: int = 5) -> None:
+    """Tiled Deb dominance build (lax.scan over fixed row blocks,
+    peak intermediate O(tile·N·D)) vs the one-shot broadcast (peak
+    O(N²·D) if unfused), on a tie-heavy integer grid at N=4096, D=8.
+    Both produce identical matrices (tests/test_nsga.py pins the
+    ranks bit-for-bit). XLA's CPU fusion already keeps the broadcast
+    from materializing N²·D, so the honest expectation here is
+    *parity*, not a speedup: the tiled kernel buys the bounded memory
+    envelope (what lets P_GA=1000+ populations rank under vmap) and
+    must not cost wall-clock for it. The gated metric is the
+    dimensionless broadcast/tiled time ratio, pinned near 1.0 — it
+    trips if the scan path ever becomes significantly slower than the
+    broadcast it replaces."""
+    from repro.core.nsga import dominance_matrix, dominance_matrix_tiled
+
+    rng = np.random.default_rng(0)
+    F = jnp.asarray(rng.integers(0, 16, (n, d)).astype(np.float32))
+
+    dom_tiled = jax.jit(lambda s: dominance_matrix_tiled(s))
+    dom_full = jax.jit(lambda s: dominance_matrix(s))
+    dom_tiled(F).block_until_ready()  # compile
+    dom_full(F).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = dom_tiled(F)
+    out.block_until_ready()
+    t_tiled = (time.perf_counter() - t0) / iters
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = dom_full(F)
+    out.block_until_ready()
+    t_full = (time.perf_counter() - t0) / iters
+    ratio = t_full / t_tiled
+    Bench.record("experiments_nsga_dominance", t_tiled,
+                 f"N{n}_D{d}_broadcast_{ratio:.2f}x")
+    _metric("nsga_dominance_tiled_s", t_tiled, higher_is_better=False,
+            gated=False)
+    _metric("nsga_dominance_tiled", ratio, higher_is_better=True,
+            gated=True)
 
 
 def experiments_baselines_scan(iters: int = 12, pop: int = 24,
@@ -417,8 +516,10 @@ def experiments_runner() -> None:
     experiments_search_loop()
     experiments_multiseed()
     experiments_nsga_scan()
+    experiments_nsga_dominance()
     experiments_baselines_scan()
     experiments_accuracy_scored()
+    experiments_imc_fused()
     experiments_joint_eval()
     experiments_smoke_run()
 
@@ -437,8 +538,10 @@ def main(argv: Optional[list] = None) -> int:
         experiments_search_loop()
         experiments_multiseed()
         experiments_nsga_scan()
+        experiments_nsga_dominance()
         experiments_baselines_scan()
         experiments_accuracy_scored()
+        experiments_imc_fused()
         experiments_joint_eval()
         experiments_smoke_run()
     else:

@@ -22,10 +22,14 @@ from .workloads import (FAMILY_NAMES, PAPER_4, PAPER_9, ArchParam, Workload,
                         get_workload, get_workload_set,
                         make_workload_builder, pack, resnet_family,
                         vit_family)
-from .nonideal import (BASELINE_ACC, accuracy_proxy_host,
-                       make_accuracy_model, noisy_crossbar_gemm)
+from .nonideal import (BACKENDS, BASELINE_ACC, accuracy_proxy_host,
+                       make_accuracy_model, noisy_crossbar_gemm,
+                       resolve_backend)
+from .scoring import (Calib, Scorer, ScorerSpec, build_scorer,
+                      sharded_score_fn)
 from .nsga import (MOSearchResult, MultiMOSearchResult,
                    batched_nsga_search, crowding_distance,
+                   dominance_matrix, dominance_matrix_tiled,
                    nondominated_rank, nsga_scan, nsga_search,
                    nsga_search_kernel, run_nsga_loop)
 from .baselines import (BASELINE_ALGORITHMS, BaselineResult,
@@ -36,4 +40,4 @@ from .baselines import (BASELINE_ALGORITHMS, BaselineResult,
                         run_baseline_loop, stochastic_rank)
 from .pareto import (edap_cost_front, front_coverage, hypervolume_2d,
                      pareto_front)
-from . import baselines, nonideal, nsga, pareto, distributed
+from . import baselines, nonideal, nsga, pareto, distributed, scoring

@@ -4,9 +4,10 @@ The paper parallelizes design evaluation over 64 CPU cores with a
 process pool; the TPU-native equivalent shards the jit'd cost model
 across the device mesh. Two granularities:
 
-  * ``make_sharded_scorer`` — shard the *population* axis of one
-    evaluation call (the host-driven search paths and the dry-run's
-    "paper's technique" cell);
+  * population-axis sharding of one evaluation call — now built by
+    ``core.scoring.build_scorer`` / ``scoring.sharded_score_fn`` (the
+    host-driven search paths and the dry-run's "paper's technique"
+    cell); ``make_sharded_scorer`` below is the deprecated wrapper;
   * ``compile_batched_search`` — shard the *search* axis: a
     device-resident search kernel (core.genetic.search_kernel,
     core.nsga.nsga_search_kernel, core.baselines.baseline_kernel) is
@@ -26,10 +27,9 @@ from __future__ import annotations
 from typing import Callable, Optional
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from .cost_model import HWConstants, evaluate_population
+from .cost_model import HWConstants
 from .objectives import Objective
 from .search_space import SearchSpace
 from .workloads import WorkloadArrays
@@ -57,32 +57,35 @@ def cached_compile(key, builder: Callable, *refs):
 def make_sharded_scorer(space: SearchSpace, wl: WorkloadArrays,
                         objective: Objective, mesh: Mesh,
                         axis: str = "data",
-                        constants: HWConstants = HWConstants()):
-    """Returns score_fn(genomes (P, n)) -> (P,) with the population axis
+                        constants: HWConstants = HWConstants(), *,
+                        backend: str = "auto"):
+    """Deprecated: use ``core.scoring.build_scorer`` (whose
+    ``score_host`` shards and pads automatically) or
+    ``scoring.sharded_score_fn`` for the raw jit handle.
+
+    Returns score_fn(genomes (P, n)) -> (P,) with the population axis
     sharded over ``axis`` of ``mesh``. P must be divisible by the axis
-    size (the GA keeps populations as powers of two).
-
-    The cost model is elementwise over the population, so sharding is
-    communication-free until the caller reduces; GSPMD partitions the
-    whole evaluation automatically from the in_shardings constraint.
+    size (the GA keeps populations as powers of two). Unlike the old
+    in-place construction, accuracy-aware objectives (``edap_acc``)
+    are now supported — the accuracy model threads through the sharded
+    evaluation like the cost model.
     """
-    table = jnp.asarray(space.value_table())
-    pop_sharding = NamedSharding(mesh, P(axis, None))
-    out_sharding = NamedSharding(mesh, P(axis))
+    import warnings
 
-    def _score(genomes):
-        m = evaluate_population(space, wl, genomes, constants, table)
-        return objective(m)
+    from .objectives import MultiObjective
+    from .scoring import Calib, ScorerSpec, build_scorer, sharded_score_fn
 
-    fn = jax.jit(_score, in_shardings=pop_sharding,
-                 out_shardings=out_sharding)
-
-    def score_fn(genomes):
-        return fn(genomes)
-
-    score_fn.lowerable = fn  # expose for dry-run .lower().compile()
-    score_fn.in_sharding = pop_sharding
-    return score_fn
+    warnings.warn("distributed.make_sharded_scorer is deprecated; use "
+                  "core.scoring.build_scorer / sharded_score_fn",
+                  DeprecationWarning, stacklevel=2)
+    if isinstance(objective, MultiObjective):
+        raise TypeError("make_sharded_scorer shards scalar scorers; "
+                        "multi-objective searches shard at the search "
+                        "axis (compile_batched_search)")
+    scorer = build_scorer(
+        space, ScorerSpec(objective, workloads=wl, constants=constants),
+        calib=Calib(), backend=backend, mesh=mesh)
+    return sharded_score_fn(scorer.score, mesh, axis)
 
 
 def compile_batched_search(search_one: Callable, mesh: Optional[Mesh] = None,

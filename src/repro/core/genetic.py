@@ -24,7 +24,7 @@ must be pure traceable JAX — that is the *whole* contract, so scorers
 that fold in the batched non-ideality accuracy model (objective kind
 ``edap_acc``) or the technology fabrication cost (``edap_cost``)
 compile into the same lax.scan as the plain EDAP evaluator
-(experiments/runner.make_traced_scorer builds all of them). Stochastic
+(core.scoring.build_scorer builds all of them). Stochastic
 models must derive their randomness from genome *content* (e.g.
 fold_in on the genome's flat index, core.nonideal.genome_flat_index),
 never from a side-channel key: the scan re-scores populations every

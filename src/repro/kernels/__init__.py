@@ -5,9 +5,16 @@
 - flash_attention: blockwise causal/windowed attention for the LM stack
 - adc: the shared signed-delta ADC model (single source of truth for
   the kernel, its oracle, and core/nonideal.py's accuracy model)
+- imc_fused: the fused population evaluator behind the accuracy
+  model's 'pallas' backend — value-table gather, conductance-noise
+  injection, crossbar-tiled bit-plane GEMM, and per-tile ADC in one
+  pass (also home of the sigma(g)/IR-drop constants)
 
 Validated in interpret mode against the pure-jnp oracles in ref.py.
 """
 from .adc import adc_full_scale, adc_quantize
+from .imc_fused import (SIGMA_POLY, imc_fused_gemm, ir_drop_factor,
+                        sigma_of_g)
 from .ops import flash_mha, imc_gemm
-from . import adc, ref
+from .ref import imc_fused_ref
+from . import adc, imc_fused, ref

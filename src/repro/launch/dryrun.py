@@ -263,10 +263,13 @@ def lower_imc_search(mesh: Mesh, population: int = 8192):
     population evaluation of the IMC cost model (core/distributed.py)."""
     from ..core import (Objective, get_space, pack, get_workload_set,
                         PAPER_4)
-    from ..core.distributed import make_sharded_scorer
+    from ..core.scoring import ScorerSpec, build_scorer, sharded_score_fn
     space = get_space("rram")
     wl = pack(get_workload_set(PAPER_4))
-    scorer = make_sharded_scorer(space, wl, Objective("edap", "max"), mesh)
+    built = build_scorer(space,
+                         ScorerSpec(Objective("edap", "max"),
+                                    workloads=wl), mesh=mesh)
+    scorer = sharded_score_fn(built.score, mesh)
     g = jax.ShapeDtypeStruct((population, space.n_params), jnp.int32)
     lowered = scorer.lowerable.lower(g)
     # model flops ~ the cost model's tensor algebra; tiny — report 0

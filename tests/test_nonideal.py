@@ -1,16 +1,21 @@
-"""Non-ideality layer: noise physics, the unified ADC GEMM path, and
-the batched (vmapped) accuracy model vs its retained host oracle."""
+"""Non-ideality layer: noise physics, the unified ADC GEMM path, the
+batched (vmapped) accuracy model vs its retained host oracle, and the
+backend routes ('jnp' einsum / 'ref' oracle / 'pallas' fused kernel)
+pinned equivalent on every distinct accuracy-scored registry config."""
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.core import get_space
-from repro.core.nonideal import (accuracy_proxy_host,
+from repro.core.nonideal import (BACKENDS, accuracy_proxy_host,
                                  apply_conductance_noise,
                                  genome_flat_index, ir_drop_factor,
                                  make_accuracy_model, noisy_crossbar_gemm,
-                                 quantize_activations, sigma_of_g)
-from repro.core.workloads import get_workload_set, pack, PAPER_4
+                                 quantize_activations, resolve_backend,
+                                 sigma_of_g)
+from repro.core.workloads import (WorkloadFamily, get_workload_set,
+                                  make_workload_builder, pack, PAPER_4)
 
 
 def test_sigma_profile_positive_and_bounded():
@@ -146,6 +151,65 @@ def test_accuracy_model_single_workload_column_restriction():
         solo = np.asarray(
             make_accuracy_model(sp, [wls[i]])(jnp.asarray(g)))
         np.testing.assert_allclose(solo[:, 0], full[:, i], rtol=1e-6)
+
+
+def test_resolve_backend_validates_and_resolves():
+    assert set(BACKENDS) == {"auto", "pallas", "ref", "jnp"}
+    for b in ("pallas", "ref", "jnp"):
+        assert resolve_backend(b) == b
+    auto = resolve_backend("auto")
+    assert auto == ("jnp" if jax.default_backend() == "cpu" else
+                    "pallas")
+    with pytest.raises(ValueError):
+        resolve_backend("tpu")
+    with pytest.raises(ValueError):
+        make_accuracy_model(get_space("rram"),
+                            get_workload_set(PAPER_4), backend="nope")
+
+
+def _registry_acc_configs():
+    """Every distinct (space, workload source, calib) configuration an
+    accuracy-scored registry scenario evaluates through the model."""
+    from repro.experiments import get_scenario, scenario_names
+    seen, configs = set(), []
+    for name in scenario_names():
+        sc = get_scenario(name)
+        if "acc" not in sc.objective and sc.min_accuracy <= 0.0:
+            continue
+        key = (sc.mem, sc.reduced_space, sc.tech_variable,
+               tuple(sorted(sc.workloads)), sc.workload_source, sc.seq,
+               sc.n_calib, sc.calib_k)
+        if key in seen:
+            continue
+        seen.add(key)
+        configs.append(sc)
+    assert configs, "registry lost all accuracy-scored scenarios?"
+    return configs
+
+
+def test_accuracy_backends_agree_on_every_registry_config():
+    """The fused routes ('ref' oracle and 'pallas' kernel, interpret on
+    CPU) reproduce the pre-existing 'jnp' einsum path's scores on every
+    deduped accuracy-scored registry configuration — the acceptance bar
+    for routing make_accuracy_model through kernels/imc_fused.py."""
+    for sc in _registry_acc_configs():
+        space = sc.space()
+        workloads = sc.resolve_workloads()
+        kw = dict(n_calib=sc.n_calib, calib_k=sc.calib_k)
+        if any(isinstance(w, WorkloadFamily) for w in workloads):
+            kw["builder"] = make_workload_builder(space, workloads)
+            args = (space, None)
+        else:
+            args = (space, pack(workloads))
+        g = jnp.asarray(_genomes(space, 3, seed=1))
+        base = np.asarray(
+            make_accuracy_model(*args, backend="jnp", **kw)(g))
+        for backend in ("ref", "pallas"):
+            got = np.asarray(
+                make_accuracy_model(*args, backend=backend, **kw)(g))
+            np.testing.assert_allclose(
+                got, base, rtol=1e-4,
+                err_msg=f"{sc.name}: backend {backend!r} diverged")
 
 
 def test_accuracy_model_calibration_knobs_match_host_oracle():

@@ -13,7 +13,9 @@ from repro.core import (FOUR_PHASES, batched_nsga_search,
                         make_evaluator, make_objective, nondominated_rank,
                         nsga_search, pack, pareto_front, phase_schedule,
                         run_nsga_loop)
-from repro.core.nsga import crowded_order, nsga_scan, tournament_select
+from repro.core.nsga import (DOMINANCE_TILE_THRESHOLD, crowded_order,
+                             dominance_matrix, dominance_matrix_tiled,
+                             nsga_scan, tournament_select)
 from repro.core import sampling
 
 try:
@@ -159,6 +161,51 @@ else:  # keep the skip visible in reports
     @pytest.mark.skip(reason="hypothesis not installed")
     def test_rank_matches_oracle():
         pass
+
+
+# ---------------------------------------------------------------------------
+# tiled dominance build (memory-bounded counts) vs the broadcast oracle
+# ---------------------------------------------------------------------------
+
+def test_tiled_dominance_matches_broadcast():
+    """dominance_matrix_tiled == dominance_matrix bit-for-bit on
+    tie-heavy integer grids, across tile sizes that divide N, don't,
+    and exceed it (the <= tile early-exit)."""
+    rng = np.random.default_rng(5)
+    for n, d, tile in ((37, 2, 8), (64, 3, 64), (130, 3, 32),
+                       (96, 1, 256)):
+        F = jnp.asarray(rng.integers(0, 5, (n, d)).astype(np.float32))
+        np.testing.assert_array_equal(
+            np.asarray(dominance_matrix_tiled(F, tile=tile)),
+            np.asarray(dominance_matrix(F)))
+
+
+@pytest.mark.parametrize("n", [1000, 1024, 1300])
+def test_tiled_rank_bit_identical_large(n):
+    """N >= 1024 (and the N=1000 bounded-memory smoke): ranks from the
+    auto-tiled build equal the broadcast-oracle ranks exactly. Above
+    DOMINANCE_TILE_THRESHOLD nondominated_rank tiles by default, so
+    this also pins the default path; tile=0 forces the oracle."""
+    assert n >= DOMINANCE_TILE_THRESHOLD
+    rng = np.random.default_rng(n)
+    F = jnp.asarray(rng.integers(0, 8, (n, 3)).astype(np.float32))
+    r_tiled = np.asarray(nondominated_rank(F))
+    r_full = np.asarray(nondominated_rank(F, tile=0))
+    np.testing.assert_array_equal(r_tiled, r_full)
+
+
+def test_tiled_rank_explicit_tile_matches_oracle_sweep():
+    """Random tie-heavy sweep with explicit (odd) tile sizes against
+    the pure-Python peeling oracle."""
+    rng = np.random.default_rng(7)
+    for _ in range(10):
+        n = int(rng.integers(2, 80))
+        d = int(rng.integers(1, 4))
+        tile = int(rng.integers(1, n + 4))
+        F = rng.integers(0, 4, (n, d)).astype(np.float32)
+        np.testing.assert_array_equal(
+            np.asarray(nondominated_rank(jnp.asarray(F), tile=tile)),
+            brute_rank(F))
 
 
 def test_tournament_prefers_rank_then_crowding():

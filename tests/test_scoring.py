@@ -1,0 +1,189 @@
+"""The unified Scorer API (core/scoring.py): build_scorer as the one
+constructor, the deprecated wrappers scoring identically, backend
+provenance in the scenario result-cache key, and the multi-device
+score_host contract on a 1-device mesh."""
+import dataclasses
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (Calib, Scorer, ScorerSpec, build_scorer,
+                        get_space, get_workload_set, make_objective,
+                        pack, sharded_score_fn)
+from repro.core.workloads import PAPER_4
+
+
+def _genomes(sp, n, seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.integers(
+        0, sp.cardinalities, size=(n, sp.n_params)).astype(np.int32))
+
+
+def _setup(objective="edap:mean", mem="rram"):
+    sp = get_space(mem)
+    wa = pack(get_workload_set(PAPER_4))
+    return sp, wa, make_objective(objective)
+
+
+# ---------------------------------------------------------------------------
+# the Scorer surface
+# ---------------------------------------------------------------------------
+
+def test_build_scorer_surfaces_and_provenance():
+    sp, wa, obj = _setup()
+    sc = build_scorer(sp, ScorerSpec(obj, workloads=wa),
+                      calib=Calib(8, 128), backend="jnp")
+    assert isinstance(sc, Scorer)
+    assert sc.backend == "jnp" and sc.calib == Calib(8, 128)
+    g = _genomes(sp, 6)
+    s = np.asarray(sc.score_host(g))
+    assert s.shape == (6,)
+    np.testing.assert_array_equal(np.asarray(jax.jit(sc.score)(g)), s)
+    m = sc.evaluator(g)
+    assert np.asarray(m.feasible).shape == (6,)
+    np.testing.assert_array_equal(np.asarray(jax.jit(sc.feasible)(g)),
+                                  np.asarray(m.feasible))
+    # cost-only objective: no accuracy model, no score matrix
+    assert sc.accuracy is None and sc.score_vec is None
+    # column restriction agrees with the traced score on workload w
+    sw = np.asarray(jax.jit(sc.score_w)(g, jnp.int32(1)))
+    assert sw.shape == (6,) and np.all(np.isfinite(sw))
+
+
+def test_build_scorer_multi_objective_score_vec():
+    sp, wa, _ = _setup()
+    mo = make_objective("edap:mean+cost")
+    sc = build_scorer(sp, ScorerSpec(mo, workloads=wa), backend="jnp")
+    g = _genomes(sp, 5)
+    vec = np.asarray(jax.jit(sc.score_vec)(g))
+    assert vec.shape == (5, 2)
+    np.testing.assert_array_equal(np.asarray(jax.jit(sc.score)(g)),
+                                  vec[:, 0])
+
+
+def test_build_scorer_backends_score_identically():
+    """The backend knob changes the accuracy model's GEMM route, not
+    its scores (the fused-path acceptance bar, end to end)."""
+    sp, wa, obj = _setup("edap_acc:mean")
+    g = _genomes(sp, 4)
+    kw = dict(calib=Calib(8, 128))
+    base = np.asarray(build_scorer(
+        sp, ScorerSpec(obj, workloads=wa), backend="jnp",
+        **kw).score_host(g))
+    for backend in ("ref", "pallas"):
+        got = np.asarray(build_scorer(
+            sp, ScorerSpec(obj, workloads=wa), backend=backend,
+            **kw).score_host(g))
+        np.testing.assert_allclose(got, base, rtol=1e-4)
+
+
+def test_build_scorer_rejects_unknown_backend():
+    sp, wa, obj = _setup()
+    with pytest.raises(ValueError, match="backend"):
+        build_scorer(sp, ScorerSpec(obj, workloads=wa), backend="gpu")
+
+
+# ---------------------------------------------------------------------------
+# deprecated wrappers: identical scores, visible deprecation
+# ---------------------------------------------------------------------------
+
+def test_deprecated_wrappers_score_identically():
+    """runner.make_scorer / runner.make_traced_scorer /
+    distributed.make_sharded_scorer are thin shims over build_scorer:
+    same scores bit-for-bit, plus a DeprecationWarning each."""
+    from repro.core.distributed import make_sharded_scorer
+    from repro.experiments import make_scorer, make_traced_scorer
+
+    sp, wa, obj = _setup()
+    g = _genomes(sp, jax.device_count() * 4)
+    want = np.asarray(build_scorer(
+        sp, ScorerSpec(obj, workloads=wa), backend="jnp").score_host(g))
+
+    with pytest.warns(DeprecationWarning):
+        score_fn, evaluator = make_scorer(sp, wa, obj, backend="jnp")
+    np.testing.assert_array_equal(np.asarray(score_fn(g)), want)
+    assert np.asarray(evaluator(g).feasible).shape == (g.shape[0],)
+
+    with pytest.warns(DeprecationWarning):
+        traced = make_traced_scorer(sp, wa, obj, backend="jnp")
+    assert isinstance(traced, Scorer)
+    np.testing.assert_array_equal(np.asarray(jax.jit(traced.score)(g)),
+                                  want)
+
+    mesh = jax.make_mesh((jax.device_count(),), ("data",))
+    with pytest.warns(DeprecationWarning):
+        sharded = make_sharded_scorer(sp, wa, obj, mesh, backend="jnp")
+    np.testing.assert_array_equal(np.asarray(sharded(g)), want)
+    # the dry-run contract survives the rewrite
+    assert hasattr(sharded, "lowerable") and hasattr(sharded,
+                                                    "in_sharding")
+    sharded.lowerable.lower(g).compile()
+
+
+def test_sharded_scorer_threads_accuracy():
+    """Satellite fix: edap_acc scores shard through the mesh-jitted
+    path (the old make_sharded_scorer could not carry the accuracy
+    model). On CPU the mesh is 1 device — the contract, not the
+    speedup, is what's pinned."""
+    sp, wa, obj = _setup("edap_acc:mean")
+    mesh = jax.make_mesh((jax.device_count(),), ("data",))
+    sc = build_scorer(sp, ScorerSpec(obj, workloads=wa),
+                      calib=Calib(8, 128), backend="jnp", mesh=mesh)
+    g = _genomes(sp, jax.device_count() * 2)
+    want = np.asarray(jax.jit(sc.score)(g))
+    np.testing.assert_allclose(np.asarray(sc.score_host(g)), want,
+                               rtol=1e-6)
+    fn = sharded_score_fn(sc.score, mesh)
+    np.testing.assert_allclose(np.asarray(fn(g)), want, rtol=1e-6)
+    # ragged populations pad transparently through score_host
+    odd = _genomes(sp, jax.device_count() * 2 + 1, seed=3)
+    assert np.asarray(sc.score_host(odd)).shape == (odd.shape[0],)
+
+
+# ---------------------------------------------------------------------------
+# runner integration: backend in the result-cache key
+# ---------------------------------------------------------------------------
+
+def test_backend_in_result_cache_key(tmp_path):
+    from repro.experiments import get_scenario, run_scenario
+
+    sc = get_scenario("sram_smoke")
+    sc = dataclasses.replace(sc, budget=sc.smoke_budget, backend="jnp")
+    out = str(tmp_path)
+    r1 = run_scenario(sc, out_dir=out, n_seeds=1)
+    assert r1["backend"] == "jnp" and not r1["cached"]
+    cache = os.path.join(out, sc.name, "result.json")
+    with open(cache) as f:
+        assert json.load(f)["backend"] == "jnp"
+    # same backend: served from cache
+    r2 = run_scenario(sc, out_dir=out, n_seeds=1)
+    assert r2["cached"]
+    # different backend: the key misses and the scenario re-runs
+    r3 = run_scenario(dataclasses.replace(sc, backend="ref"),
+                      out_dir=out, n_seeds=1)
+    assert not r3["cached"] and r3["backend"] == "ref"
+    assert r3["best_score"] == pytest.approx(r1["best_score"])
+
+
+def test_runner_uses_build_scorer_only():
+    """API-consolidation acceptance: the runner, distributed, and nsga
+    modules construct scorers exclusively through build_scorer — the
+    deprecated constructors survive only as wrappers (their bodies
+    delegate), never as call sites."""
+    import inspect
+
+    from repro.core import distributed, nsga
+    from repro.experiments import runner
+
+    for mod in (runner, distributed, nsga):
+        src = inspect.getsource(mod)
+        calls = [ln for ln in src.splitlines()
+                 if ("make_scorer(" in ln or "make_traced_scorer(" in ln
+                     or "make_sharded_scorer(" in ln)
+                 and "def " not in ln]
+        assert not calls, f"{mod.__name__} still calls a deprecated " \
+                          f"constructor: {calls}"
