@@ -60,6 +60,16 @@ Cells:
                              (search + specific-baseline fan-out +
                              report), write=False so only compute is
                              measured.
+  experiments_campaign_throughput — the campaign-engine gate: a fleet
+                             of shape-identical scenarios run
+                             sequentially (one retrace + compile each,
+                             the pre-campaign ``run --all`` cost) vs
+                             the campaign engine (one shape-bucketed
+                             mega-batched compile + dispatch), both
+                             cold-started; plus the warm re-run
+                             against the persistent XLA compile cache.
+                             The cold sequential/campaign speedup is
+                             gated (campaign_throughput).
 
 CLI (the CI bench job):
   PYTHONPATH=src python -m benchmarks.bench_experiments \
@@ -511,17 +521,125 @@ def experiments_smoke_run() -> None:
     _metric("smoke_run_s", dt, higher_is_better=False, gated=False)
 
 
+def experiments_campaign_throughput(n_clones: int = 6) -> None:
+    """Campaign engine vs sequential execution of a scenario fleet.
+
+    The fleet is ``n_clones`` shape-identical scenarios (distinct
+    names, same space/workloads/budget — the rram_smoke config).
+    Sequentially each scenario builds its own scorer and re-traces +
+    re-compiles its search kernel; the campaign engine content-keys
+    one Scorer, buckets all fleet lanes into one compiled
+    mega-batched device call per lane flavor (generalized lanes and
+    specific-baseline lanes dispatch separately), and
+    pipelines drains against dispatches. Both sides start cold (jit
+    caches + kernel cache cleared), so the speedup measures exactly
+    what ``run --all`` pays today: per-scenario retrace/compile.
+
+    A third timing re-runs the campaign against the persistent XLA
+    compilation cache it just filled (in-process jit caches cleared
+    again): the nightly-CI steady state, where even the one bucket
+    compile is served from disk.
+    """
+    import dataclasses
+    import tempfile
+
+    from repro.core.distributed import kernel_cache_clear
+    from repro.experiments import run_campaign
+
+    base = get_scenario("rram_smoke")
+    clones = [dataclasses.replace(base, name=f"rram_smoke_clone{i}")
+              for i in range(n_clones)]
+
+    kernel_cache_clear()
+    jax.clear_caches()
+    t0 = time.perf_counter()
+    for sc in clones:
+        run_scenario(sc, write=False)
+    t_seq = time.perf_counter() - t0
+
+    with tempfile.TemporaryDirectory() as cache_dir:
+        try:
+            kernel_cache_clear()
+            jax.clear_caches()
+            t0 = time.perf_counter()
+            _, stats = run_campaign(clones, write=False,
+                                    compile_cache=cache_dir)
+            t_camp = time.perf_counter() - t0
+
+            kernel_cache_clear()
+            jax.clear_caches()
+            t0 = time.perf_counter()
+            _, stats_warm = run_campaign(clones, write=False,
+                                         compile_cache=cache_dir)
+            t_warm = time.perf_counter() - t0
+        finally:
+            jax.config.update("jax_compilation_cache_dir", None)
+
+    speedup = t_seq / t_camp
+    pc = stats_warm["persistent_cache"]
+    Bench.record("experiments_campaign_sequential", t_seq,
+                 f"{n_clones}scen_cold")
+    Bench.record("experiments_campaign_batched", t_camp,
+                 f"{stats['n_buckets']}bucket_"
+                 f"{stats['lanes_total']}lane")
+    Bench.record("experiments_campaign_warm", t_warm,
+                 f"sig_hits{pc['signature_hits']}")
+    Bench.record("experiments_campaign_speedup", speedup,
+                 f"{speedup:.1f}x")
+    _metric("campaign_sequential_s", t_seq, higher_is_better=False,
+            gated=False)
+    _metric("campaign_batched_s", t_camp, higher_is_better=False,
+            gated=False)
+    _metric("campaign_warm_s", t_warm, higher_is_better=False,
+            gated=False)
+    _metric("campaign_throughput", speedup, higher_is_better=True,
+            gated=True)
+    _metric("campaign_scenarios_per_sec", stats["scenarios_per_sec"],
+            higher_is_better=True, gated=False)
+    # compile-cache effectiveness on the warm pass: every bucket
+    # signature must re-hit the on-disk index (1.0 = all hits)
+    hits = pc["signature_hits"]
+    total = hits + pc["signature_misses"]
+    _metric("campaign_cache_hit_rate", hits / max(total, 1),
+            higher_is_better=True, gated=False)
+
+
+_SMOKE_CELLS = (
+    "experiments_search_loop",
+    "experiments_multiseed",
+    "experiments_nsga_scan",
+    "experiments_nsga_dominance",
+    "experiments_baselines_scan",
+    "experiments_accuracy_scored",
+    "experiments_imc_fused",
+    "experiments_joint_eval",
+    "experiments_smoke_run",
+    "experiments_campaign_throughput",
+)
+
+_ALL_CELLS = ("experiments_eval_hot",) + _SMOKE_CELLS
+
+
+def _run_cells(names) -> list:
+    """Run each cell isolated: one failing cell doesn't lose the
+    others' metrics (multi-cell regressions stay diagnosable in one
+    run). Returns the failed cell names."""
+    import traceback
+
+    failed = []
+    for name in names:
+        try:
+            globals()[name]()
+        except Exception:
+            traceback.print_exc()
+            failed.append(name)
+    return failed
+
+
 def experiments_runner() -> None:
-    experiments_eval_hot()
-    experiments_search_loop()
-    experiments_multiseed()
-    experiments_nsga_scan()
-    experiments_nsga_dominance()
-    experiments_baselines_scan()
-    experiments_accuracy_scored()
-    experiments_imc_fused()
-    experiments_joint_eval()
-    experiments_smoke_run()
+    failed = _run_cells(_ALL_CELLS)
+    if failed:
+        raise RuntimeError(f"bench cells failed: {', '.join(failed)}")
 
 
 def main(argv: Optional[list] = None) -> int:
@@ -534,22 +652,14 @@ def main(argv: Optional[list] = None) -> int:
     ap.add_argument("--out", default=None,
                     help="write metrics JSON (bench_result.json)")
     args = ap.parse_args(argv)
-    if args.smoke:
-        experiments_search_loop()
-        experiments_multiseed()
-        experiments_nsga_scan()
-        experiments_nsga_dominance()
-        experiments_baselines_scan()
-        experiments_accuracy_scored()
-        experiments_imc_fused()
-        experiments_joint_eval()
-        experiments_smoke_run()
-    else:
-        experiments_runner()
+    failed = _run_cells(_SMOKE_CELLS if args.smoke else _ALL_CELLS)
     if args.out:
         with open(args.out, "w") as f:
             json.dump({"metrics": _METRICS}, f, indent=1, sort_keys=True)
         print(f"-> {args.out}")
+    if failed:
+        print(f"{len(failed)} cell(s) failed: {', '.join(failed)}")
+        return 1
     return 0
 
 

@@ -39,10 +39,15 @@ def regression_of(baseline: Dict, new: Dict) -> float:
 
 
 def check(result: Dict, baseline: Dict, threshold: float = 0.30,
-          strict: bool = False) -> Tuple[bool, list]:
-    """Returns (ok, report_lines)."""
+          strict: bool = False) -> Tuple[bool, list, list]:
+    """Returns (ok, report_lines, failing_metric_names).
+
+    Every baseline metric is evaluated before the verdict: one bad
+    cell never hides another, so a multi-cell regression shows the
+    full damage in a single CI run.
+    """
     lines = []
-    ok = True
+    failing = []
     base_metrics = baseline.get("metrics", {})
     new_metrics = result.get("metrics", {})
     for name, base in sorted(base_metrics.items()):
@@ -50,14 +55,15 @@ def check(result: Dict, baseline: Dict, threshold: float = 0.30,
         gated = bool(base.get("gated")) or strict
         if new is None:
             lines.append(f"MISSING {name}: in baseline but not in result")
-            ok = ok and not gated
+            if gated:
+                failing.append(name)
             continue
         reg = regression_of(base, new)
         status = "ok"
         if reg > threshold:
             status = "REGRESSION" if gated else "warn"
             if gated:
-                ok = False
+                failing.append(name)
         word = "worse" if reg > 0 else "better"
         lines.append(
             f"{status:>10}  {name}: baseline {base['value']:.4g} -> "
@@ -67,7 +73,7 @@ def check(result: Dict, baseline: Dict, threshold: float = 0.30,
     for name in sorted(set(new_metrics) - set(base_metrics)):
         lines.append(f"       new  {name}: {new_metrics[name]['value']:.4g}"
                      " (not in baseline)")
-    return ok, lines
+    return not failing, lines, failing
 
 
 def main(argv: Optional[list] = None) -> int:
@@ -92,11 +98,16 @@ def main(argv: Optional[list] = None) -> int:
         print(f"check_regression: cannot load inputs: {e}",
               file=sys.stderr)
         return 2
-    ok, lines = check(result, baseline, threshold=args.threshold,
-                      strict=args.strict)
+    ok, lines, failing = check(result, baseline,
+                               threshold=args.threshold,
+                               strict=args.strict)
     print("\n".join(lines))
-    print("perf gate:", "PASS" if ok else "FAIL")
-    return 0 if ok else 1
+    if failing:
+        print(f"perf gate: FAIL — {len(failing)} gated metric(s): "
+              + ", ".join(failing))
+        return 1
+    print("perf gate: PASS")
+    return 0
 
 
 if __name__ == "__main__":

@@ -444,11 +444,17 @@ def make_baseline_ops(algorithm: str, cards: jax.Array,
 
 
 def baseline_scan(key: jax.Array, ops: BaselineOps, iters: int,
+                  active: Optional[jax.Array] = None,
                   ) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """Traceable search: init + ``iters`` steps in ONE lax.scan.
 
     Returns device arrays (best_x_real (n,), best_score, history
     (iters+1,) best-so-far). vmap over ``key`` to batch seeds.
+
+    ``active`` is an optional (iters,) bool mask; inactive iterations
+    leave the carry (state + PRNG key) untouched, so an iteration axis
+    padded with trailing False rows is bit-identical to the unpadded
+    run after slicing the history back (campaign shape bucketing).
     """
     key, k0 = jax.random.split(key)
     state = ops.init(k0)
@@ -460,8 +466,20 @@ def baseline_scan(key: jax.Array, ops: BaselineOps, iters: int,
         st = ops.step(k, st)
         return (key, st), ops.best(st)[1]
 
-    (_, state), hist = jax.lax.scan(body, (key, state), None,
-                                    length=iters)
+    def body_masked(carry, act):
+        key, st = carry
+        key2, k = jax.random.split(key)
+        st2 = ops.step(k, st)
+        key = jnp.where(act, key2, key)
+        st = jax.tree.map(lambda a, b: jnp.where(act, a, b), st2, st)
+        return (key, st), ops.best(st)[1]
+
+    if active is None:
+        (_, state), hist = jax.lax.scan(body, (key, state), None,
+                                        length=iters)
+    else:
+        (_, state), hist = jax.lax.scan(body_masked, (key, state),
+                                        active)
     bx, bs = ops.best(state)
     return bx, bs, jnp.concatenate([s_init[None], hist])
 
@@ -469,12 +487,13 @@ def baseline_scan(key: jax.Array, ops: BaselineOps, iters: int,
 def baseline_kernel(key: jax.Array, cards: jax.Array,
                     score_fn: Callable, *, algorithm: str, pop: int,
                     iters: int, penalty_fn: Optional[Callable] = None,
+                    active: Optional[jax.Array] = None,
                     **hyper) -> Tuple[jax.Array, ...]:
     """search_kernel's baseline sibling: one traceable computation
     from PRNG key to (best_genome int32, best_score, history)."""
     ops = make_baseline_ops(algorithm, cards, score_fn, pop,
                             penalty_fn=penalty_fn, **hyper)
-    bx, bs, hist = baseline_scan(key, ops, iters)
+    bx, bs, hist = baseline_scan(key, ops, iters, active=active)
     return _to_index(bx[None], cards)[0], bs, hist
 
 

@@ -24,6 +24,7 @@ Used by launch/search.py, experiments/runner.py, and exercised
 """
 from __future__ import annotations
 
+from collections import OrderedDict
 from typing import Callable, Optional
 
 import jax
@@ -38,20 +39,45 @@ from .workloads import WorkloadArrays
 # re-running the same search setup (e.g. a host loop re-driving one
 # seed, or the Table 3 runner re-dispatching an algorithm) must not
 # re-trace the whole scanned search. Values pin the closures so id()
-# keys stay valid; growth is bounded by the number of distinct scorer
-# closures, same order as the per-scenario jitted evaluators.
-_KERNEL_CACHE: dict = {}
+# keys stay valid. LRU-bounded: a long campaign cycling through many
+# scenario/bucket shapes would otherwise pin every compiled executable
+# (and the scorer closures passed as refs) for the process lifetime.
+KERNEL_CACHE_MAXSIZE = 128
+_KERNEL_CACHE: "OrderedDict[object, tuple]" = OrderedDict()
+_CACHE_STATS = {"hits": 0, "misses": 0, "evictions": 0}
 
 
 def cached_compile(key, builder: Callable, *refs):
     """Return (building once) the compiled callable registered under
     ``key``; ``refs`` keep the closures the key's id() components point
-    at alive for the cache's lifetime."""
+    at alive for the entry's lifetime. Least-recently-used entries are
+    evicted past ``KERNEL_CACHE_MAXSIZE`` (an evicted kernel is merely
+    re-traced on next use — and usually re-hits the persistent XLA
+    compilation cache, see experiments/campaign.py)."""
     entry = _KERNEL_CACHE.get(key)
     if entry is None:
+        _CACHE_STATS["misses"] += 1
         entry = (builder(), refs)
         _KERNEL_CACHE[key] = entry
+        while len(_KERNEL_CACHE) > KERNEL_CACHE_MAXSIZE:
+            _KERNEL_CACHE.popitem(last=False)
+            _CACHE_STATS["evictions"] += 1
+    else:
+        _CACHE_STATS["hits"] += 1
+        _KERNEL_CACHE.move_to_end(key)
     return entry[0]
+
+
+def kernel_cache_stats() -> dict:
+    """Snapshot of the in-process kernel cache counters + current size."""
+    return dict(_CACHE_STATS, size=len(_KERNEL_CACHE))
+
+
+def kernel_cache_clear() -> None:
+    """Drop every cached kernel and zero the counters (tests/benches)."""
+    _KERNEL_CACHE.clear()
+    for k in _CACHE_STATS:
+        _CACHE_STATS[k] = 0
 
 
 def make_sharded_scorer(space: SearchSpace, wl: WorkloadArrays,
@@ -89,7 +115,8 @@ def make_sharded_scorer(space: SearchSpace, wl: WorkloadArrays,
 
 
 def compile_batched_search(search_one: Callable, mesh: Optional[Mesh] = None,
-                           axis: str = "data") -> Callable:
+                           axis: str = "data", *,
+                           donate: bool = False) -> Callable:
     """jit(vmap(search_one)): S independent searches as one computation.
 
     ``search_one`` is a traceable kernel ``key -> pytree of arrays``
@@ -100,9 +127,20 @@ def compile_batched_search(search_one: Callable, mesh: Optional[Mesh] = None,
     communication (searches are independent by construction). The axis
     size must then divide S; callers fall back to mesh=None otherwise
     (see experiments/runner._search_mesh).
+
+    ``donate=True`` donates every input buffer (lane keys, padded
+    schedules, masks) to the computation — callers must pass freshly
+    built arrays and not reuse them. Worth it off-CPU at paper-scale
+    populations; on CPU XLA typically declines the donation (and logs
+    warnings), so the campaign engine only asks off-CPU.
     """
     fn = jax.vmap(search_one)
+    kw = {}
+    if donate:
+        import inspect
+        n_args = len(inspect.signature(search_one).parameters)
+        kw["donate_argnums"] = tuple(range(n_args))
     if mesh is None:
-        return jax.jit(fn)
+        return jax.jit(fn, **kw)
     sh = NamedSharding(mesh, P(axis))
-    return jax.jit(fn, in_shardings=sh, out_shardings=sh)
+    return jax.jit(fn, in_shardings=sh, out_shardings=sh, **kw)

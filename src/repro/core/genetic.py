@@ -163,13 +163,21 @@ _generation_step_jit = jax.jit(_generation_step)
 
 def ga_scan(key: jax.Array, init_pop: jax.Array, cards: jax.Array,
             schedule: jax.Array, score_fn: Callable[[jax.Array], jax.Array],
-            ) -> Tuple[jax.Array, ...]:
+            active: Optional[jax.Array] = None) -> Tuple[jax.Array, ...]:
     """Traceable multi-phase GA: the whole schedule in one lax.scan.
 
     ``score_fn`` must be traceable (pure JAX). Returns device arrays
     (best_genome, best_score, history (T+1,), pop_sorted, scores_sorted)
     — no host transfer happens here; callers materialize once at the
     end of the full search computation.
+
+    ``active`` is an optional (T,) bool mask over schedule rows; rows
+    with ``active[t] == False`` leave the carry (population, best, PRNG
+    key) untouched, so a schedule padded to T' > T rows with a
+    ``[True]*T + [False]*(T'-T)`` mask produces bit-identical results
+    to the unpadded run: history rows T..T'-1 repeat row T-1 and the
+    appended final entry equals the unpadded one (see
+    experiments/campaign.py's shape bucketing).
     """
     def body(carry, params):
         key, pop, best_g, best_s = carry
@@ -184,9 +192,25 @@ def ga_scan(key: jax.Array, init_pop: jax.Array, cards: jax.Array,
                                params[0], params[1], params[2], params[3])
         return (key, pop, best_g, best_s), best_s
 
+    def body_masked(carry, xs):
+        params, act = xs
+        key, pop, best_g, best_s = carry
+        (key2, pop2, best_g2, best_s2), _ = body(
+            (key, pop, best_g, best_s), params)
+        key = jnp.where(act, key2, key)
+        pop = jnp.where(act, pop2, pop)
+        best_g = jnp.where(act, best_g2, best_g)
+        best_s = jnp.where(act, best_s2, best_s)
+        return (key, pop, best_g, best_s), best_s
+
     best0 = jnp.array(jnp.inf, jnp.float32)
     carry = (key, init_pop, init_pop[0], best0)
-    (key, pop, best_g, best_s), hist = jax.lax.scan(body, carry, schedule)
+    if active is None:
+        (key, pop, best_g, best_s), hist = jax.lax.scan(
+            body, carry, schedule)
+    else:
+        (key, pop, best_g, best_s), hist = jax.lax.scan(
+            body_masked, carry, (schedule, active))
     scores = score_fn(pop)
     order = jnp.argsort(scores)
     pop, scores = pop[order], scores[order]
@@ -202,7 +226,9 @@ def search_kernel(key: jax.Array, cards: jax.Array, schedule: jax.Array,
                   feasible_fn: Optional[Callable] = None, *,
                   p_h: int, p_e: int, p_ga: int,
                   hamming_sampling: bool = True,
-                  oversample: int = 4) -> Tuple[jax.Array, ...]:
+                  oversample: int = 4,
+                  active: Optional[jax.Array] = None
+                  ) -> Tuple[jax.Array, ...]:
     """Traceable Algorithm 1: device-resident sampling + scanned GA.
 
     Capacity filtering happens *inside* the compiled region via the
@@ -225,7 +251,7 @@ def search_kernel(key: jax.Array, cards: jax.Array, schedule: jax.Array,
                                               feasible_fn=feasible_fn,
                                               oversample=oversample)
         init = pool[:p_ga]
-    return ga_scan(key, init, cards, schedule, score_fn)
+    return ga_scan(key, init, cards, schedule, score_fn, active=active)
 
 
 class SearchResult(NamedTuple):
@@ -366,11 +392,17 @@ def batched_joint_search(keys: jax.Array, space: SearchSpace,
     cards = jnp.asarray(space.cardinalities.astype(np.float32))
     schedule = jnp.asarray(phase_schedule(phases, generations_per_phase))
 
-    def one(key):
-        return search_kernel(key, cards, schedule, score_fn, feasible_fn,
+    # schedule + active mask ride along as runtime lane data (not
+    # closed-over constants): the compiled kernel is then the exact
+    # computation the campaign engine's bucketed lanes run, so
+    # bucketed and sequential executions stay bit-identical — baking
+    # the schedule lets XLA constant-fold reductions differently and
+    # drift by ULPs.
+    def one(key, sched, active):
+        return search_kernel(key, cards, sched, score_fn, feasible_fn,
                              p_h=p_h, p_e=p_e, p_ga=p_ga,
                              hamming_sampling=hamming_sampling,
-                             oversample=oversample)
+                             oversample=oversample, active=active)
 
     from .distributed import compile_batched_search
     fn = _cached_jit(
@@ -379,7 +411,10 @@ def batched_joint_search(keys: jax.Array, space: SearchSpace,
          hamming_sampling, oversample),
         lambda: compile_batched_search(one, mesh=mesh),
         space, score_fn, feasible_fn, mesh)
-    best_g, best_s, hist, pops, scores = fn(keys)
+    S = keys.shape[0]
+    scheds = jnp.broadcast_to(schedule, (S,) + schedule.shape)
+    actives = jnp.ones((S, schedule.shape[0]), bool)
+    best_g, best_s, hist, pops, scores = fn(keys, scheds, actives)
     return MultiSearchResult(
         best_genomes=np.asarray(best_g), best_scores=np.asarray(best_s),
         histories=np.asarray(hist), populations=np.asarray(pops),

@@ -247,7 +247,7 @@ def _nsga_generation(key: jax.Array, pop: jax.Array, scores: jax.Array,
 def nsga_scan(key: jax.Array, init_pop: jax.Array, cards: jax.Array,
               schedule: jax.Array,
               score_vec: Callable[[jax.Array], jax.Array],
-              ) -> Tuple[jax.Array, ...]:
+              active: Optional[jax.Array] = None) -> Tuple[jax.Array, ...]:
     """Traceable multi-phase NSGA-II: the whole schedule in one
     lax.scan.
 
@@ -256,7 +256,12 @@ def nsga_scan(key: jax.Array, init_pop: jax.Array, cards: jax.Array,
     matrix, its ranks, and the (T+1, D) best-so-far *ideal point*
     (per-objective minimum over everything evaluated) — the
     multi-objective analogue of the GA's best-so-far history, monotone
-    non-increasing per column."""
+    non-increasing per column.
+
+    ``active`` is an optional (T,) bool mask over schedule rows; rows
+    with ``active[t] == False`` leave the carry untouched, so a
+    schedule padded with trailing inactive rows is bit-identical to
+    the unpadded run once the history is sliced back to (T+1, D)."""
     scores0 = score_vec(init_pop)
     ideal0 = jnp.min(scores0, axis=0)
 
@@ -269,8 +274,24 @@ def nsga_scan(key: jax.Array, init_pop: jax.Array, cards: jax.Array,
         ideal = jnp.minimum(ideal, jnp.min(scores, axis=0))
         return (key, pop, scores, ideal), ideal
 
+    def body_masked(carry, xs):
+        params, act = xs
+        key, pop, scores, ideal = carry
+        (key2, pop2, scores2, ideal2), _ = body(
+            (key, pop, scores, ideal), params)
+        key = jnp.where(act, key2, key)
+        pop = jnp.where(act, pop2, pop)
+        scores = jnp.where(act, scores2, scores)
+        ideal = jnp.where(act, ideal2, ideal)
+        return (key, pop, scores, ideal), ideal
+
     carry = (key, init_pop, scores0, ideal0)
-    (key, pop, scores, ideal), hist = jax.lax.scan(body, carry, schedule)
+    if active is None:
+        (key, pop, scores, ideal), hist = jax.lax.scan(
+            body, carry, schedule)
+    else:
+        (key, pop, scores, ideal), hist = jax.lax.scan(
+            body_masked, carry, (schedule, active))
     ranks = nondominated_rank(scores)
     crowd = crowding_distance(scores, ranks)
     order = crowded_order(ranks, crowd)
@@ -285,7 +306,9 @@ def nsga_search_kernel(key: jax.Array, cards: jax.Array,
                        feasible_fn: Optional[Callable] = None, *,
                        p_h: int, p_e: int, p_ga: int,
                        hamming_sampling: bool = True,
-                       oversample: int = 4) -> Tuple[jax.Array, ...]:
+                       oversample: int = 4,
+                       active: Optional[jax.Array] = None
+                       ) -> Tuple[jax.Array, ...]:
     """Traceable Algorithm 1 with a multi-objective tail: the same
     device-resident sampling as genetic.search_kernel (capacity masking
     inside the compiled region), but the P_E Hamming-diverse pool seeds
@@ -307,7 +330,7 @@ def nsga_search_kernel(key: jax.Array, cards: jax.Array,
                                               feasible_fn=feasible_fn,
                                               oversample=oversample)
         init = pool[:p_ga]
-    return nsga_scan(key, init, cards, schedule, score_vec)
+    return nsga_scan(key, init, cards, schedule, score_vec, active=active)
 
 
 # ---------------------------------------------------------------------------
@@ -427,12 +450,15 @@ def batched_nsga_search(keys: jax.Array, space: SearchSpace,
     cards = jnp.asarray(space.cardinalities.astype(np.float32))
     schedule = jnp.asarray(phase_schedule(phases, generations_per_phase))
 
-    def one(key):
-        return nsga_search_kernel(key, cards, schedule, score_vec,
+    # schedule + active as runtime lane data, exactly like
+    # genetic.batched_joint_search: the compiled kernel matches the
+    # campaign engine's bucketed lanes bit for bit
+    def one(key, sched, active):
+        return nsga_search_kernel(key, cards, sched, score_vec,
                                   feasible_fn, p_h=p_h, p_e=p_e,
                                   p_ga=p_ga,
                                   hamming_sampling=hamming_sampling,
-                                  oversample=oversample)
+                                  oversample=oversample, active=active)
 
     from .distributed import compile_batched_search
     fn = _cached_jit(
@@ -441,7 +467,10 @@ def batched_nsga_search(keys: jax.Array, space: SearchSpace,
          hamming_sampling, oversample),
         lambda: compile_batched_search(one, mesh=mesh),
         space, score_vec, feasible_fn, mesh)
-    pops, scores, ranks, hists = fn(keys)
+    S = keys.shape[0]
+    scheds = jnp.broadcast_to(schedule, (S,) + schedule.shape)
+    actives = jnp.ones((S, schedule.shape[0]), bool)
+    pops, scores, ranks, hists = fn(keys, scheds, actives)
     return MultiMOSearchResult(
         populations=np.asarray(pops), scores=np.asarray(scores),
         ranks=np.asarray(ranks), histories=np.asarray(hists),

@@ -4,14 +4,21 @@
   python -m repro.experiments show --scenario rram_small_set
   python -m repro.experiments run --scenario rram_small_set \
       [--out DIR] [--seed N] [--seeds S] [--force] [--smoke]
-      [--backend auto|pallas|ref|jnp]
-  python -m repro.experiments run --all [--out DIR]
+      [--backend auto|pallas|ref|jnp] [--campaign] [--compile-cache DIR]
+  python -m repro.experiments run --all [--out DIR] [--sequential]
   python -m repro.experiments report [--out DIR]
 
 ``run`` executes a named scenario (cached/resumable; see runner.py) and
 writes ``result.json`` + ``report.md`` under ``--out``; ``report``
 aggregates every cached result into ``summary.md`` — the regenerated
 paper tables. README.md maps each paper table to its scenario names.
+
+``run --all`` routes through the campaign engine (campaign.py): shape-
+bucketed mega-batched scenario execution with async pipelining, plus
+an optional persistent compilation cache (``--compile-cache DIR``).
+Results are byte-identical to sequential execution (modulo timing
+fields); ``--sequential`` restores the old one-scenario-at-a-time
+loop.
 """
 from __future__ import annotations
 
@@ -49,51 +56,94 @@ def cmd_show(args) -> int:
     return 0
 
 
+def _prepare(args, name):
+    sc = get_scenario(name)
+    if args.smoke:
+        # scenario-specific smoke budget: the Table 3 study keeps
+        # its >= 5 seeds (hit rates) even at smoke scale
+        sc = dataclasses.replace(sc, budget=sc.smoke_budget)
+    if args.backend:
+        sc = dataclasses.replace(sc, backend=args.backend)
+    return sc
+
+
+def _print_campaign_stats(stats, out) -> None:
+    kc, pc = stats["kernel_cache"], stats["persistent_cache"]
+    line = (f"campaign: {stats['n_bucketed']} scenarios in "
+            f"{stats['n_buckets']} buckets "
+            f"({stats['lanes_total']} lanes, "
+            f"{stats['lanes_padded']} pad), "
+            f"{stats['n_cached']} cached, "
+            f"{stats['n_fallback']} sequential; "
+            f"{stats['scenarios_per_sec']:.2f} scenarios/s; "
+            f"kernel cache {kc['hits']}h/{kc['misses']}m")
+    if pc["enabled"]:
+        line += (f"; compile cache {pc['signature_hits']}h/"
+                 f"{pc['signature_misses']}m sigs, "
+                 f"{pc['entries_after'] - pc['entries_before']} new "
+                 f"entries")
+    print(line)
+    print(f"  -> {out}/campaign_stats.json")
+
+
 def cmd_run(args) -> int:
     names = list(REGISTRY) if args.all else [args.scenario]
     if not args.all and args.scenario is None:
         print("run: pass --scenario NAME or --all", file=sys.stderr)
         return 2
+    use_campaign = ((args.all or args.campaign)
+                    and not args.sequential)
+    if use_campaign:
+        from . import campaign
+        results, stats = campaign.run_campaign(
+            [_prepare(args, n) for n in names], out_dir=args.out,
+            force=args.force, seed=args.seed, n_seeds=args.seeds,
+            compile_cache=args.compile_cache)
+        for name, res in zip(names, results):
+            _print_result(name, res, args.out)
+        _print_campaign_stats(stats, args.out)
+        return 0
+    if args.compile_cache:
+        from . import campaign
+        campaign.enable_persistent_cache(args.compile_cache)
     for name in names:
-        sc = get_scenario(name)
-        if args.smoke:
-            # scenario-specific smoke budget: the Table 3 study keeps
-            # its >= 5 seeds (hit rates) even at smoke scale
-            sc = dataclasses.replace(sc, budget=sc.smoke_budget)
-        if args.backend:
-            sc = dataclasses.replace(sc, backend=args.backend)
-        res = runner.run_scenario(sc, out_dir=args.out, force=args.force,
-                                  seed=args.seed, n_seeds=args.seeds)
-        tag = "cached" if res.get("cached") else \
-            f"{res['wall_time_s']:.1f}s"
-        if res.get("algorithm") == "alg_compare":
-            hits = ", ".join(f"{n} {a['hit_rate']}"
-                             for n, a in res["algorithms"].items())
-            print(f"[{tag}] {name}: best {res['objective']} score "
-                  f"{res['best_score']:.4g} by "
-                  f"{res['best_algorithm']}; hits: {hits}")
-            print(f"  -> {args.out}/{name}/result.json (+ report.md)")
-            continue
-        gap = res.get("gap", {}).get("mean_pct")
-        gap_s = f", mean gap {gap:.1f}%" if gap is not None else ""
-        seeds = res.get("seeds")
-        seed_s = ""
-        if seeds and seeds.get("count", 1) > 1:
-            bs = seeds["best_score"]
-            seed_s = (f" [{seeds['count']} seeds: "
-                      f"{bs['mean']:.4g} ± {bs['std']:.3g}]")
-        front_s = ""
-        pareto = res.get("pareto")
-        if pareto and pareto.get("searched"):
-            front_s = f", searched front: {len(pareto['front'])} designs"
-            if pareto.get("hypervolume") is not None:
-                front_s += f" (HV {pareto['hypervolume']:.4g})"
-        print(f"[{tag}] {name}: best {res['objective']} score "
-              f"{res['best_score']:.4g}, area "
-              f"{res['generalized']['area_mm2']:.1f} mm²"
-              f"{gap_s}{seed_s}{front_s}")
-        print(f"  -> {args.out}/{name}/result.json (+ report.md)")
+        res = runner.run_scenario(
+            _prepare(args, name), out_dir=args.out, force=args.force,
+            seed=args.seed, n_seeds=args.seeds)
+        _print_result(name, res, args.out)
     return 0
+
+
+def _print_result(name, res, out) -> None:
+    tag = "cached" if res.get("cached") else \
+        f"{res['wall_time_s']:.1f}s"
+    if res.get("algorithm") == "alg_compare":
+        hits = ", ".join(f"{n} {a['hit_rate']}"
+                         for n, a in res["algorithms"].items())
+        print(f"[{tag}] {name}: best {res['objective']} score "
+              f"{res['best_score']:.4g} by "
+              f"{res['best_algorithm']}; hits: {hits}")
+        print(f"  -> {out}/{name}/result.json (+ report.md)")
+        return
+    gap = res.get("gap", {}).get("mean_pct")
+    gap_s = f", mean gap {gap:.1f}%" if gap is not None else ""
+    seeds = res.get("seeds")
+    seed_s = ""
+    if seeds and seeds.get("count", 1) > 1:
+        bs = seeds["best_score"]
+        seed_s = (f" [{seeds['count']} seeds: "
+                  f"{bs['mean']:.4g} ± {bs['std']:.3g}]")
+    front_s = ""
+    pareto = res.get("pareto")
+    if pareto and pareto.get("searched"):
+        front_s = f", searched front: {len(pareto['front'])} designs"
+        if pareto.get("hypervolume") is not None:
+            front_s += f" (HV {pareto['hypervolume']:.4g})"
+    print(f"[{tag}] {name}: best {res['objective']} score "
+          f"{res['best_score']:.4g}, area "
+          f"{res['generalized']['area_mm2']:.1f} mm²"
+          f"{gap_s}{seed_s}{front_s}")
+    print(f"  -> {out}/{name}/result.json (+ report.md)")
 
 
 def cmd_report(args) -> int:
@@ -104,6 +154,9 @@ def cmd_report(args) -> int:
               file=sys.stderr)
         return 1
     text = report.render_summary(results)
+    stats = report.load_campaign_stats(args.out)
+    if stats is not None:
+        text += report.render_campaign_stats(stats)
     path = os.path.join(args.out, "summary.md")
     with open(path, "w") as f:
         f.write(text)
@@ -147,6 +200,20 @@ def main(argv=None) -> int:
                         "the scenario's own, usually 'auto' = platform-"
                         "dependent); the resolved choice is part of the "
                         "cache key")
+    p.add_argument("--campaign", action="store_true",
+                   help="route single-scenario runs through the "
+                        "campaign engine too (--all uses it by "
+                        "default)")
+    p.add_argument("--sequential", action="store_true",
+                   help="disable the campaign engine and run scenarios "
+                        "strictly sequentially (the pre-campaign "
+                        "behaviour; results are identical modulo "
+                        "timing fields)")
+    p.add_argument("--compile-cache", default=None, metavar="DIR",
+                   help="persist XLA-compiled kernels under DIR "
+                        "(jax compilation cache): repeated invocations "
+                        "skip compile entirely; nightly CI persists "
+                        "this directory across runs")
     p.set_defaults(fn=cmd_run)
 
     p = sub.add_parser("report", help="aggregate results into summary.md")

@@ -582,9 +582,68 @@ def render_summary(results: List[Dict]) -> str:
     return text
 
 
+def load_campaign_stats(out_dir: str) -> Optional[Dict]:
+    """The last campaign run's stats (campaign.run_campaign writes
+    ``<out_dir>/campaign_stats.json``), or None."""
+    path = os.path.join(out_dir, "campaign_stats.json")
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        return json.load(f)
+
+
+def render_campaign_stats(stats: Dict) -> str:
+    """Markdown section for the campaign engine's execution stats:
+    bucketing, throughput, and the three cache layers' hit counters."""
+    kc, pc = stats["kernel_cache"], stats["persistent_cache"]
+    lines = [
+        "", "## Campaign execution", "",
+        f"- {stats['n_bucketed']} scenarios mega-batched into "
+        f"{stats['n_buckets']} shape buckets "
+        f"({stats['lanes_total']} search lanes, "
+        f"{stats['lanes_padded']} padding); "
+        f"{stats['n_cached']} served from the result cache, "
+        f"{stats['n_fallback']} ran sequentially",
+        f"- sustained throughput: "
+        f"{stats['scenarios_per_sec']:.2f} scenarios/s "
+        f"({stats['wall_time_s']:.1f}s wall)",
+        f"- in-process kernel cache: {kc['hits']} hits / "
+        f"{kc['misses']} misses / {kc['evictions']} evictions",
+    ]
+    if pc["enabled"]:
+        lines.append(
+            f"- persistent XLA cache ({pc['dir']}): "
+            f"{pc['signature_hits']} bucket-signature hits / "
+            f"{pc['signature_misses']} misses, "
+            f"{pc['entries_after'] - pc['entries_before']} new "
+            f"entries ({pc['entries_after']} total)")
+    else:
+        lines.append("- persistent XLA cache: disabled "
+                     "(pass --compile-cache DIR)")
+    lines += [
+        "",
+        "| bucket | engine | scenarios | lanes | gen tier | "
+        "dispatch (s) | drain (s) |",
+        "|---|---|---|---|---|---|---|",
+    ]
+    for b in stats.get("buckets", []):
+        lines.append(
+            f"| {b['signature'][:8]} | {b['engine']} "
+            f"| {', '.join(b['scenarios'])} "
+            f"| {b['lanes']}→{b['lanes_padded_to']} "
+            f"| {b['gen_tier']} | {b['dispatch_s']:.2f} "
+            f"| {b['drain_s']:.2f} |")
+    return "\n".join(lines) + "\n"
+
+
 def write_summary(out_dir: str, path: Optional[str] = None) -> str:
-    """Aggregate cached results into ``summary.md``; returns the text."""
+    """Aggregate cached results into ``summary.md`` (appending the
+    campaign-execution section when campaign stats exist); returns the
+    text."""
     text = render_summary(load_results(out_dir))
+    stats = load_campaign_stats(out_dir)
+    if stats is not None:
+        text += render_campaign_stats(stats)
     path = path or os.path.join(out_dir, "summary.md")
     os.makedirs(os.path.dirname(path), exist_ok=True)
     with open(path, "w") as f:

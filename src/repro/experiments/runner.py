@@ -93,6 +93,44 @@ from .scenarios import Scenario
 
 DEFAULT_OUT_DIR = os.path.join("experiments", "results")
 
+# Result-cache schema version, part of every result.json and of the
+# cache key: bump it whenever the cache-key fields or the result schema
+# change shape, so stale entries invalidate uniformly instead of via
+# per-field ad-hoc checks (the pre-v2 key grew seed -> n_seeds ->
+# budget -> calib -> backend one exception at a time).
+RESULT_SCHEMA_VERSION = 2
+
+
+def cache_key_fields(scenario: Scenario, seed: int,
+                     n_seeds: int) -> Dict:
+    """The fields a cached result.json must match to be served."""
+    return {
+        "schema_version": RESULT_SCHEMA_VERSION,
+        "seed": seed,
+        "n_seeds": n_seeds,
+        "budget": dataclasses.asdict(scenario.budget),
+        "calib": {"n_calib": scenario.n_calib,
+                  "calib_k": scenario.calib_k},
+        "backend": nonideal.resolve_backend(scenario.backend),
+    }
+
+
+def load_cached_result(scenario: Scenario, out_dir: str, seed: int,
+                       n_seeds: int) -> Optional[Dict]:
+    """Serve ``<out_dir>/<scenario>/result.json`` when its cache-key
+    fields match, else None. Legacy results (no schema_version, or any
+    mismatched field) recompute once."""
+    cache = os.path.join(out_dir, scenario.name, "result.json")
+    if not os.path.exists(cache):
+        return None
+    with open(cache) as f:
+        cached = json.load(f)
+    want = cache_key_fields(scenario, seed, n_seeds)
+    if all(cached.get(k) == v for k, v in want.items()):
+        cached["cached"] = True
+        return cached
+    return None
+
 
 def make_scorer(space: SearchSpace, wa: WorkloadArrays,
                 objective: Objective, *, n_calib: int = 32,
@@ -471,27 +509,39 @@ def run_specific_fanout(scenario: Scenario, space: SearchSpace,
                       for s in seeds for i in range(W)])
     ws = jnp.asarray([i for _ in seeds for i in range(W)], jnp.int32)
 
-    def one(key, w):
+    # schedule + active as runtime lane data, matching the campaign
+    # engine's specific-lane kernel bit for bit (see
+    # genetic.batched_joint_search)
+    def one(key, w, sched, active):
         def sc(g):
             return traced.score_w(g, w)
         fe = None
         if rram:
             def fe(g):
                 return traced.feasible_w(g, w)
-        return search_kernel(key, cards, schedule, sc, fe, p_h=p_h,
+        return search_kernel(key, cards, sched, sc, fe, p_h=p_h,
                              p_e=p_e, p_ga=b.p_ga,
-                             hamming_sampling=hamming)
+                             hamming_sampling=hamming, active=active)
 
     fn = compile_batched_search(one, mesh=_search_mesh(S * W))
-    best_g, best_s, _, _, _ = fn(keys, ws)
+    scheds = jnp.broadcast_to(schedule, (S * W,) + schedule.shape)
+    actives = jnp.ones((S * W, schedule.shape[0]), bool)
+    best_g, best_s, _, _, _ = fn(keys, ws, scheds, actives)
     genomes = np.asarray(best_g).reshape(S, W, -1)
     best_scores = np.asarray(best_s).reshape(S, W)
-    # each specific design evaluated on its own workload (EDAP is the
-    # gap metric regardless of the search objective kind)
+    return {"genomes": genomes, "best_scores": best_scores,
+            "edap": specific_edap(traced, genomes)}
+
+
+def specific_edap(traced: TracedScorer, genomes: np.ndarray) -> np.ndarray:
+    """Each specific design's EDAP on its own workload: (S, W, n)
+    genomes -> (S, W). EDAP is the gap metric regardless of the search
+    objective kind; shared by the fan-out above and the campaign
+    engine's lane reassembly."""
+    S, W = genomes.shape[:2]
     m = traced.metrics(jnp.asarray(genomes.reshape(S * W, -1)))
     edap_all = np.asarray(per_workload_scores(m, "edap")).reshape(S, W, W)
-    edap = edap_all[:, np.arange(W), np.arange(W)]
-    return {"genomes": genomes, "best_scores": best_scores, "edap": edap}
+    return edap_all[:, np.arange(W), np.arange(W)]
 
 
 def _single_workload(scenario: Scenario, wl_name: str) -> Scenario:
@@ -683,6 +733,67 @@ def _searched_front_block(space: SearchSpace, traced: TracedScorer,
     return block, genomes, scores
 
 
+@dataclasses.dataclass(frozen=True)
+class ScenarioSetup:
+    """Host-side scenario state shared by the sequential path and the
+    campaign engine: the search space, resolved workloads, and the
+    objective — everything ``run_scenario`` derives before any device
+    work."""
+    space: SearchSpace
+    workloads: tuple
+    families: tuple
+    builder: object
+    wa: Optional[WorkloadArrays]
+    wl_names: tuple
+    objective: Objective
+
+    @property
+    def is_joint(self) -> bool:
+        return bool(self.families)
+
+    @property
+    def is_mo(self) -> bool:
+        return isinstance(self.objective, MultiObjective)
+
+
+def setup_scenario(scenario: Scenario) -> ScenarioSetup:
+    """Resolve a scenario's space/workloads/objective (no device work)."""
+    space = scenario.space()
+    workloads = scenario.resolve_workloads()
+    families = [w for w in workloads if isinstance(w, WorkloadFamily)]
+    if families:
+        if scenario.algorithm in ("random", "alg_compare"):
+            raise ValueError(
+                f"scenario {scenario.name!r}: joint co-search scenarios "
+                f"run the scan-compiled GA/NSGA-II engines; algorithm "
+                f"{scenario.algorithm!r} has no joint-genome path")
+        builder = make_workload_builder(space, workloads)
+        wa = None
+        wl_names = builder.names
+    else:
+        builder = None
+        wa = pack(workloads)
+        wl_names = wa.names
+    objective = make_objective(scenario.objective,
+                               min_accuracy=scenario.min_accuracy)
+    return ScenarioSetup(space=space, workloads=tuple(workloads),
+                         families=tuple(families), builder=builder,
+                         wa=wa, wl_names=tuple(wl_names),
+                         objective=objective)
+
+
+def build_scenario_scorer(scenario: Scenario,
+                          st: ScenarioSetup) -> Scorer:
+    """The scenario's Scorer, exactly as the sequential path builds it
+    (the campaign engine content-keys and shares these)."""
+    return build_scorer(
+        st.space,
+        ScorerSpec(st.objective, workloads=st.wa, builder=st.builder),
+        budget=scenario.budget,
+        calib=Calib(scenario.n_calib, scenario.calib_k),
+        backend=scenario.backend)
+
+
 def run_scenario(scenario: Scenario,
                  out_dir: str = DEFAULT_OUT_DIR,
                  force: bool = False,
@@ -701,49 +812,13 @@ def run_scenario(scenario: Scenario,
     seed = scenario.seed if seed is None else seed
     n_seeds = scenario.budget.n_seeds if n_seeds is None else n_seeds
     seeds = [seed + j for j in range(n_seeds)]
-    budget_dict = dataclasses.asdict(scenario.budget)
-    calib_dict = {"n_calib": scenario.n_calib,
-                  "calib_k": scenario.calib_k}
-    backend = nonideal.resolve_backend(scenario.backend)
-    sdir = os.path.join(out_dir, scenario.name)
-    cache = os.path.join(sdir, "result.json")
-    if write and not force and os.path.exists(cache):
-        with open(cache) as f:
-            cached = json.load(f)
-        if (cached.get("seed") == seed
-                and cached.get("n_seeds", 1) == n_seeds
-                and cached.get("budget") == budget_dict
-                and cached.get("calib") == calib_dict
-                and cached.get("backend") == backend):
-            # budget, calibration fidelity and the (resolved) accuracy
-            # backend are part of the cache key: a --smoke run must not
-            # shadow a full-budget result, an n_calib/calib_k change
-            # must re-score, and a backend='pallas' run must not serve
-            # a 'jnp' result (legacy results without the fields
-            # recompute once)
-            cached["cached"] = True
+    if write and not force:
+        cached = load_cached_result(scenario, out_dir, seed, n_seeds)
+        if cached is not None:
             return cached
 
     t0 = time.perf_counter()
-    space = scenario.space()
-    workloads = scenario.resolve_workloads()
-    families = [w for w in workloads if isinstance(w, WorkloadFamily)]
-    is_joint = bool(families)
-    if is_joint:
-        if scenario.algorithm in ("random", "alg_compare"):
-            raise ValueError(
-                f"scenario {scenario.name!r}: joint co-search scenarios "
-                f"run the scan-compiled GA/NSGA-II engines; algorithm "
-                f"{scenario.algorithm!r} has no joint-genome path")
-        builder = make_workload_builder(space, workloads)
-        wa = None
-        wl_names = builder.names
-    else:
-        builder = None
-        wa = pack(workloads)
-        wl_names = wa.names
-    objective = make_objective(scenario.objective,
-                               min_accuracy=scenario.min_accuracy)
+    st = setup_scenario(scenario)
     if scenario.algorithm == "alg_compare":
         # Table 3 / §III-C1: six algorithms, per-algorithm hit-rate
         # statistics — a different result schema, same cache/artifact
@@ -755,40 +830,65 @@ def run_scenario(scenario: Scenario,
             "objective": scenario.objective,
             "paper_ref": scenario.paper_ref,
             "description": scenario.description,
-            "seed": seed,
-            "n_seeds": n_seeds,
-            "budget": budget_dict,
-            "calib": calib_dict,
-            "backend": backend,
-            "workloads": list(wl_names),
+            "workloads": list(st.wl_names),
             "seeds": {"count": n_seeds, "list": seeds},
             "cached": False,
+            **cache_key_fields(scenario, seed, n_seeds),
         }
-        result.update(run_alg_compare(scenario, space, wa, objective,
-                                      seeds))
+        result.update(run_alg_compare(scenario, st.space, st.wa,
+                                      st.objective, seeds))
         result["wall_time_s"] = time.perf_counter() - t0
         if write:
-            report.write_artifacts(result, sdir)
+            report.write_artifacts(result,
+                                   os.path.join(out_dir, scenario.name))
         return result
-    is_mo = isinstance(objective, MultiObjective)
-    traced = build_scorer(
-        space, ScorerSpec(objective, workloads=wa, builder=builder),
-        budget=scenario.budget,
-        calib=Calib(scenario.n_calib, scenario.calib_k),
-        backend=scenario.backend)
+    traced = build_scenario_scorer(scenario, st)
 
-    if is_mo:
-        res = run_mo_search_batched(scenario, space, traced, seeds)
-        # per-seed best-so-far minimum of the first objective (the
-        # ideal-point history's last row) — the seeds-block scalar
-        best_scores = res.histories[:, -1, 0]
+    if st.is_mo:
+        res = run_mo_search_batched(scenario, st.space, traced, seeds)
     else:
         # the host-facing surfaces only serve the random-search path;
         # the Scorer carries them jitted (and population-sharded on
         # multi-device runtimes)
-        res = run_search_batched(scenario, space, traced, seeds,
+        res = run_search_batched(scenario, st.space, traced, seeds,
                                  traced.score_host, traced.evaluator)
-        best_scores = np.asarray(res.best_scores)
+    return finalize_result(scenario, st, traced, res, seeds,
+                           specific_fanout=specific_fanout,
+                           out_dir=out_dir, write=write, t0=t0)
+
+
+def result_best_scores(res, is_mo: bool) -> np.ndarray:
+    """Per-seed scalar best score: best_scores for scalar searches, the
+    ideal-point history's last row (first objective) for NSGA-II —
+    the seeds-block statistic both execution paths report."""
+    if is_mo:
+        return np.asarray(res.histories[:, -1, 0])
+    return np.asarray(res.best_scores)
+
+
+def finalize_result(scenario: Scenario, st: ScenarioSetup,
+                    traced: TracedScorer, res, seeds: List[int], *,
+                    spec: Optional[Dict] = None,
+                    specific_fanout: bool = True,
+                    out_dir: str = DEFAULT_OUT_DIR,
+                    write: bool = True,
+                    t0: Optional[float] = None) -> Dict:
+    """Search results -> result dict (+ artifacts): everything after
+    the device search, shared verbatim by the sequential path and the
+    campaign engine so both produce identical JSONs (modulo timing
+    fields).
+
+    ``spec`` optionally injects precomputed specific-baseline arrays
+    ('genomes'/'best_scores'/'edap', the run_specific_fanout schema);
+    when None the fan-out (or the sequential fallback) runs here.
+    """
+    if t0 is None:
+        t0 = time.perf_counter()
+    seed, n_seeds = seeds[0], len(seeds)
+    sdir = os.path.join(out_dir, scenario.name)
+    space, objective, is_mo = st.space, st.objective, st.is_mo
+    workloads, wl_names = st.workloads, st.wl_names
+    best_scores = result_best_scores(res, is_mo)
     if float(np.min(best_scores)) >= INFEASIBLE_PENALTY:
         # the device-resident sampler cannot raise mid-computation the
         # way the host rejection loop did — surface the same condition
@@ -823,11 +923,7 @@ def run_scenario(scenario: Scenario,
         "objective": scenario.objective,
         "paper_ref": scenario.paper_ref,
         "description": scenario.description,
-        "seed": seed,
-        "n_seeds": n_seeds,
-        "budget": budget_dict,
-        "calib": calib_dict,
-        "backend": backend,
+        **cache_key_fields(scenario, seed, n_seeds),
         "workloads": list(wl_names),
         "best_score": float(best_scores[j_best]),
         "generalized": _design_metrics(space, traced, best_genome,
@@ -840,19 +936,19 @@ def run_scenario(scenario: Scenario,
         "sampling_time_s": getattr(res, "sampling_time_s", 0.0),
         "cached": False,
     }
-    if is_joint:
+    if st.is_joint:
         # which architecture the joint search chose (report section):
         # arch slice of the best genome, decoded, plus the concrete
         # model each family builds at those indices
         g = np.asarray(best_genome)
         decoded = space.decode(g)
         chosen = {}
-        for f in families:
+        for f in st.families:
             idx = [int(g[space.index(f"{f.name}.{p.name}")])
                    for p in f.params]
             chosen[f.name] = f.build_at(idx).name
         result["joint"] = {
-            "families": [f.name for f in families],
+            "families": [f.name for f in st.families],
             "arch_params": {n: decoded[n] for n in space.arch_names},
             "chosen_models": chosen,
             "n_arch_dims": space.n_arch,
@@ -873,14 +969,16 @@ def run_scenario(scenario: Scenario,
     # kind; only the random-search baseline stays sequential.
     gap_means = None
     if scenario.specific_baselines and len(workloads) > 1 and not is_mo:
-        use_fanout = (specific_fanout
-                      and scenario.algorithm != "random")
-        if use_fanout:
-            spec = run_specific_fanout(scenario, space, traced, seeds,
-                                       len(workloads))
-        else:
-            spec = run_specific_sequential(scenario, space, objective,
-                                           workloads, seeds)
+        if spec is None:
+            use_fanout = (specific_fanout
+                          and scenario.algorithm != "random")
+            if use_fanout:
+                spec = run_specific_fanout(scenario, space, traced,
+                                           seeds, len(workloads))
+            else:
+                spec = run_specific_sequential(scenario, space,
+                                               objective, workloads,
+                                               seeds)
 
         # per-seed generalized EDAPs -> per-seed gap (one device call)
         m_gen = traced.metrics(jnp.asarray(res.best_genomes))

@@ -29,30 +29,58 @@ def test_check_gates_only_gated_metrics():
         "wall_s": _m(1.0),
     }}
     # ungated metric regresses badly, gated one is fine -> pass
-    ok, lines = check({"metrics": {"speedup": _m(9.0, higher=True),
-                                   "wall_s": _m(100.0)}}, baseline)
+    ok, lines, failing = check({"metrics": {"speedup": _m(9.0, higher=True),
+                                            "wall_s": _m(100.0)}}, baseline)
     assert ok
+    assert not failing
     assert any("warn" in line for line in lines)
     # gated metric regresses past the threshold -> fail
-    ok, _ = check({"metrics": {"speedup": _m(5.0, higher=True),
-                               "wall_s": _m(1.0)}}, baseline)
+    ok, _, failing = check({"metrics": {"speedup": _m(5.0, higher=True),
+                                        "wall_s": _m(1.0)}}, baseline)
     assert not ok
+    assert failing == ["speedup"]
     # strict gates everything
-    ok, _ = check({"metrics": {"speedup": _m(10.0, higher=True),
-                               "wall_s": _m(100.0)}}, baseline,
-                  strict=True)
+    ok, _, failing = check({"metrics": {"speedup": _m(10.0, higher=True),
+                                        "wall_s": _m(100.0)}}, baseline,
+                           strict=True)
     assert not ok
+    assert failing == ["wall_s"]
     # missing gated metric -> fail
-    ok, _ = check({"metrics": {"wall_s": _m(1.0)}}, baseline)
+    ok, _, failing = check({"metrics": {"wall_s": _m(1.0)}}, baseline)
     assert not ok
+    assert failing == ["speedup"]
 
 
 def test_check_threshold():
     baseline = {"metrics": {"t": _m(1.0, gated=True)}}
-    ok, _ = check({"metrics": {"t": _m(1.25)}}, baseline, threshold=0.30)
+    ok, _, _ = check({"metrics": {"t": _m(1.25)}}, baseline,
+                     threshold=0.30)
     assert ok
-    ok, _ = check({"metrics": {"t": _m(1.35)}}, baseline, threshold=0.30)
+    ok, _, _ = check({"metrics": {"t": _m(1.35)}}, baseline,
+                     threshold=0.30)
     assert not ok
+
+
+def test_check_reports_every_failing_gate():
+    """One bad cell must not hide another: the verdict comes after
+    every baseline metric is evaluated, and all failing gated names
+    are returned (multi-cell regressions diagnosable in one run)."""
+    baseline = {"metrics": {
+        "a_speedup": _m(10.0, higher=True, gated=True),
+        "b_speedup": _m(10.0, higher=True, gated=True),
+        "c_missing": _m(1.0, gated=True),
+        "d_wall_s": _m(1.0),
+    }}
+    ok, lines, failing = check(
+        {"metrics": {"a_speedup": _m(1.0, higher=True),
+                     "b_speedup": _m(1.0, higher=True),
+                     "d_wall_s": _m(100.0)}}, baseline)
+    assert not ok
+    assert failing == ["a_speedup", "b_speedup", "c_missing"]
+    # every metric still got a report line
+    assert sum("REGRESSION" in line for line in lines) == 2
+    assert any("MISSING" in line for line in lines)
+    assert any("warn" in line for line in lines)
 
 
 def test_committed_baseline_gates_search_speedup():
@@ -90,4 +118,13 @@ def test_committed_baseline_gates_search_speedup():
     assert m["baselines_scan_speedup_x"]["higher_is_better"]
     assert m["baselines_scan_speedup_x"]["value"] * 0.7 >= 1.0
     for name in ("baselines_scan_s", "baselines_host_s"):
+        assert name in m
+    # and the campaign engine's cold sequential-vs-mega-batched
+    # speedup (bench_experiments.experiments_campaign_throughput);
+    # the acceptance floor is 3x on a 6-scenario fleet
+    assert m["campaign_throughput"]["gated"]
+    assert m["campaign_throughput"]["higher_is_better"]
+    assert m["campaign_throughput"]["value"] >= 3.0
+    for name in ("campaign_sequential_s", "campaign_batched_s",
+                 "campaign_warm_s", "campaign_cache_hit_rate"):
         assert name in m
