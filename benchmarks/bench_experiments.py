@@ -70,6 +70,15 @@ Cells:
                              against the persistent XLA compile cache.
                              The cold sequential/campaign speedup is
                              gated (campaign_throughput).
+  experiments_service_throughput — the co-design service gate: the
+                             same request fleet submitted one
+                             run_campaign call at a time vs
+                             concurrently through CodesignService's
+                             micro-batch window (one plan, one
+                             bucket compile), both cold. The
+                             speedup is gated (service_throughput);
+                             sustained requests/sec comes from the
+                             service stats surface.
 
 CLI (the CI bench job):
   PYTHONPATH=src python -m benchmarks.bench_experiments \
@@ -604,6 +613,77 @@ def experiments_campaign_throughput(n_clones: int = 6) -> None:
             higher_is_better=True, gated=False)
 
 
+def experiments_service_throughput(n_requests: int = 6) -> None:
+    """CodesignService vs one-at-a-time run_campaign requests.
+
+    ``n_requests`` shape-identical scenario requests (distinct names,
+    the rram_smoke config) are first executed the way a client without
+    the service would: one ``run_campaign([sc])`` call per request,
+    each paying its own plan + compile. Then the same requests are
+    submitted concurrently to a CodesignService, whose micro-batch
+    window collects them into one campaign plan — one shape bucket,
+    one mega-batched compile — before dispatch. Each baseline request
+    starts cold (jit caches + kernel cache cleared per call: a client
+    invocation is its own process), the service once, so the gated
+    speedup measures the batching + amortization a long-lived
+    request loop actually delivers, and
+    ``service_requests_per_sec`` reports the sustained rate from the
+    service's own stats surface.
+    """
+    import dataclasses
+
+    from repro.core.distributed import kernel_cache_clear
+    from repro.experiments import run_campaign
+    from repro.serve.codesign import CodesignService
+    from repro.api import SearchRequest
+
+    base = get_scenario("rram_smoke")
+    clones = [dataclasses.replace(base, name=f"rram_smoke_req{i}")
+              for i in range(n_requests)]
+
+    t_seq = 0.0
+    for sc in clones:
+        # each one-at-a-time request is its own client invocation: a
+        # fresh process with nothing compiled (the pre-service cost)
+        kernel_cache_clear()
+        jax.clear_caches()
+        t0 = time.perf_counter()
+        run_campaign([sc], write=False)
+        t_seq += time.perf_counter() - t0
+
+    kernel_cache_clear()
+    jax.clear_caches()
+    with CodesignService(write=False, autostart=False, window_s=0.05,
+                         max_batch=n_requests) as svc:
+        t0 = time.perf_counter()
+        rids = [svc.submit(SearchRequest(sc)) for sc in clones]
+        svc.start()
+        responses = [svc.result(rid, timeout=1800) for rid in rids]
+        t_svc = time.perf_counter() - t0
+        stats = svc.stats()
+    assert all(r.status == "completed" for r in responses), \
+        [r.status for r in responses]
+
+    speedup = t_seq / t_svc
+    Bench.record("experiments_service_sequential", t_seq,
+                 f"{n_requests}req_cold")
+    Bench.record("experiments_service_batched", t_svc,
+                 f"{stats.batches}batch_{stats.buckets}bucket_"
+                 f"{stats.lanes_total}lane")
+    Bench.record("experiments_service_speedup", speedup,
+                 f"{speedup:.1f}x")
+    _metric("service_sequential_s", t_seq, higher_is_better=False,
+            gated=False)
+    _metric("service_batched_s", t_svc, higher_is_better=False,
+            gated=False)
+    _metric("service_throughput", speedup, higher_is_better=True,
+            gated=True)
+    _metric("service_requests_per_sec", stats.requests_per_sec,
+            higher_is_better=True, gated=False)
+    _metric("service_bucket_occupancy", stats.bucket_occupancy,
+            higher_is_better=True, gated=False)
+
+
 _SMOKE_CELLS = (
     "experiments_search_loop",
     "experiments_multiseed",
@@ -615,6 +695,7 @@ _SMOKE_CELLS = (
     "experiments_joint_eval",
     "experiments_smoke_run",
     "experiments_campaign_throughput",
+    "experiments_service_throughput",
 )
 
 _ALL_CELLS = ("experiments_eval_hot",) + _SMOKE_CELLS

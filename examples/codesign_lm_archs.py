@@ -17,8 +17,8 @@ import sys
 import jax
 import jax.numpy as jnp
 
+from repro.api import SMOKE_BUDGET, get_scenario, run_scenario
 from repro.configs import get_config
-from repro.experiments import SMOKE_BUDGET, get_scenario, run_scenario
 from repro.kernels.ops import imc_gemm
 
 scenario = get_scenario("sram_lm_archs")

@@ -9,8 +9,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (Objective, PAPER_4, get_space, get_workload_set,
-                        joint_search, make_evaluator, pack)
+from repro.api import (Objective, PAPER_4, get_space, get_workload_set,
+                       joint_search, make_evaluator, pack)
 
 space = get_space("rram")
 workloads = get_workload_set(PAPER_4)

@@ -9,9 +9,9 @@ import time
 import jax
 import numpy as np
 
+from repro.api import LMRequest, ServeEngine
 from repro.configs import get_config
 from repro.models import init_params
-from repro.serve import Request, ServeEngine
 
 cfg = get_config("recurrentgemma_9b", reduced=True)
 params, _ = init_params(jax.random.PRNGKey(0), cfg)
@@ -22,7 +22,7 @@ t0 = time.perf_counter()
 for rid in range(10):
     prompt = rng.integers(0, cfg.vocab_size,
                           int(rng.integers(4, 20))).astype(np.int32)
-    engine.submit(Request(rid=rid, prompt=prompt, max_new_tokens=12))
+    engine.submit(LMRequest(rid=rid, prompt=prompt, max_new_tokens=12))
 done = engine.run()
 dt = time.perf_counter() - t0
 tokens = sum(len(r.output) for r in done.values())

@@ -30,11 +30,6 @@ from typing import Callable, Optional
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from .cost_model import HWConstants
-from .objectives import Objective
-from .search_space import SearchSpace
-from .workloads import WorkloadArrays
-
 # Compiled search kernels cached per (closure identity, static knobs):
 # re-running the same search setup (e.g. a host loop re-driving one
 # seed, or the Table 3 runner re-dispatching an algorithm) must not
@@ -80,38 +75,19 @@ def kernel_cache_clear() -> None:
         _CACHE_STATS[k] = 0
 
 
-def make_sharded_scorer(space: SearchSpace, wl: WorkloadArrays,
-                        objective: Objective, mesh: Mesh,
-                        axis: str = "data",
-                        constants: HWConstants = HWConstants(), *,
-                        backend: str = "auto"):
-    """Deprecated: use ``core.scoring.build_scorer`` (whose
-    ``score_host`` shards and pads automatically) or
-    ``scoring.sharded_score_fn`` for the raw jit handle.
+def make_sharded_scorer(*_args, **_kwargs):
+    """Removed (was a DeprecationWarning wrapper). Build the scorer
+    with the mesh and shard its traced closure::
 
-    Returns score_fn(genomes (P, n)) -> (P,) with the population axis
-    sharded over ``axis`` of ``mesh``. P must be divisible by the axis
-    size (the GA keeps populations as powers of two). Unlike the old
-    in-place construction, accuracy-aware objectives (``edap_acc``)
-    are now supported — the accuracy model threads through the sharded
-    evaluation like the cost model.
+        sc = build_scorer(space, ScorerSpec(objective, workloads=wl),
+                          mesh=mesh)
+        sharded = sharded_score_fn(sc.score, mesh)
     """
-    import warnings
-
-    from .objectives import MultiObjective
-    from .scoring import Calib, ScorerSpec, build_scorer, sharded_score_fn
-
-    warnings.warn("distributed.make_sharded_scorer is deprecated; use "
-                  "core.scoring.build_scorer / sharded_score_fn",
-                  DeprecationWarning, stacklevel=2)
-    if isinstance(objective, MultiObjective):
-        raise TypeError("make_sharded_scorer shards scalar scorers; "
-                        "multi-objective searches shard at the search "
-                        "axis (compile_batched_search)")
-    scorer = build_scorer(
-        space, ScorerSpec(objective, workloads=wl, constants=constants),
-        calib=Calib(), backend=backend, mesh=mesh)
-    return sharded_score_fn(scorer.score, mesh, axis)
+    raise ImportError(
+        "distributed.make_sharded_scorer was removed; use "
+        "core.scoring.build_scorer(space, ScorerSpec(objective, "
+        "workloads=wl), mesh=mesh) with scoring.sharded_score_fn "
+        "(or import both from repro.api)")
 
 
 def compile_batched_search(search_one: Callable, mesh: Optional[Mesh] = None,

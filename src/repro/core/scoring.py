@@ -18,10 +18,10 @@ engines consume (``score`` / ``score_w`` / per-workload restriction /
 ``score_vec`` for NSGA-II), plus the host-facing jitted/sharded
 ``score_host`` and ``evaluator``, plus the provenance fields
 (``backend``, ``calib``, ``budget``) result caches key on. The old
-names live on as thin deprecated wrappers (runner.make_scorer,
-runner.make_traced_scorer, distributed.make_sharded_scorer) so call
-sites migrate incrementally; tests/test_scoring.py pins that the
-wrappers score identically to ``build_scorer``.
+names (runner.make_scorer, runner.make_traced_scorer,
+distributed.make_sharded_scorer) are gone: they survive only as
+ImportError stubs naming this module, pinned in
+tests/test_scoring.py.
 
 ``backend`` selects the accuracy model's crossbar-GEMM route
 declaratively (nonideal.BACKENDS: 'auto' | 'pallas' | 'ref' | 'jnp')

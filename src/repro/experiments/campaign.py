@@ -132,6 +132,7 @@ class CampaignJob:
     hamming: bool = True
     wants_spec: bool = False
     result: Optional[Dict] = None
+    error: Optional[str] = None  # set when a degraded retry also fails
 
     @property
     def n_workloads(self) -> int:
@@ -432,6 +433,95 @@ class _Bucket:
         self.drain_s = time.perf_counter() - t0
 
 
+def bucket_jobs(jobs: Sequence[CampaignJob]
+                ) -> "OrderedDict[Tuple, _Bucket]":
+    """Group the plan's bucket-kind jobs by bucket signature, in first-
+    appearance order (cached/fallback jobs are skipped — they never
+    touch a bucket kernel)."""
+    buckets: "OrderedDict[Tuple, _Bucket]" = OrderedDict()
+    for job in jobs:
+        if job.kind != "bucket":
+            continue
+        bk = job.bucket_key()
+        if bk not in buckets:
+            buckets[bk] = _Bucket(bk)
+        buckets[bk].add(job)
+    return buckets
+
+
+def _run_bucket_sequential(bucket: _Bucket, out_dir: str, write: bool,
+                           specific_fanout: bool, cause: str) -> None:
+    """Degraded path: execute every job of a failed bucket through the
+    sequential runner (per-scenario compile + dispatch). One job
+    failing does not sink its bucket-mates; it records ``job.error``
+    and leaves ``job.result`` None for the caller to surface."""
+    import traceback
+    for job in bucket.jobs:
+        if job.result is not None:
+            continue
+        try:
+            job.result = runner.run_scenario(
+                job.scenario, out_dir=out_dir, force=True,
+                seed=job.seeds[0], write=write,
+                n_seeds=len(job.seeds), specific_fanout=specific_fanout)
+        except Exception:
+            job.error = (f"bucket degraded ({cause}); sequential retry "
+                         f"failed:\n{traceback.format_exc(limit=8)}")
+
+
+def execute_buckets(buckets: Sequence[_Bucket],
+                    out_dir: str = runner.DEFAULT_OUT_DIR, *,
+                    write: bool = True, specific_fanout: bool = True,
+                    window: int = 2, on_drained=None,
+                    degrade_sequential: bool = False) -> int:
+    """Dispatch + drain a planned bucket sequence with async
+    pipelining: buckets are dispatched ``window`` deep before the
+    oldest drains, so host-side result finalization overlaps device
+    compute. Shared by run_campaign and serve.codesign.CodesignService.
+
+    ``on_drained(bucket)`` fires after each bucket's jobs carry their
+    results (the service streams progress / completes futures from
+    it). With ``degrade_sequential`` a bucket whose kernel fails to
+    compile (or whose drain raises) falls back to per-scenario
+    sequential execution instead of sinking the run; returns the
+    number of buckets degraded (0 when all mega-batched calls held).
+    """
+    degraded = 0
+    inflight: List[_Bucket] = []
+
+    def _drain(bucket: _Bucket) -> None:
+        nonlocal degraded
+        try:
+            bucket.drain(out_dir, write, specific_fanout)
+        except Exception as e:
+            if not degrade_sequential:
+                raise
+            _run_bucket_sequential(bucket, out_dir, write,
+                                   specific_fanout, repr(e))
+            degraded += 1
+        if on_drained is not None:
+            on_drained(bucket)
+
+    for bucket in buckets:
+        try:
+            bucket.dispatch()
+        except Exception as e:
+            if not degrade_sequential:
+                raise
+            _run_bucket_sequential(bucket, out_dir, write,
+                                   specific_fanout, repr(e))
+            degraded += 1
+            if on_drained is not None:
+                on_drained(bucket)
+            continue
+        inflight.append(bucket)
+        while len(inflight) > max(window, 1):
+            _drain(inflight.pop(0))
+    while inflight:
+        _drain(inflight.pop(0))
+    return degraded
+
+
 # ---------------------------------------------------------------------------
 # persistent compilation cache
 # ---------------------------------------------------------------------------
@@ -497,18 +587,10 @@ def run_campaign(scenarios: Sequence[Scenario],
 
     jobs = plan_campaign(scenarios, out_dir=out_dir, force=force,
                          seed=seed, n_seeds=n_seeds, write=write)
-    buckets: "OrderedDict[Tuple, _Bucket]" = OrderedDict()
-    for job in jobs:
-        if job.kind != "bucket":
-            continue
-        bk = job.bucket_key()
-        if bk not in buckets:
-            buckets[bk] = _Bucket(bk)
-        buckets[bk].add(job)
+    buckets = bucket_jobs(jobs)
 
     index = _load_index(index_path) if index_path else {}
     sig_hits = sig_misses = 0
-    inflight: List[_Bucket] = []
     for bucket in buckets.values():
         sig = bucket.signature()
         if sig in index:
@@ -518,12 +600,8 @@ def run_campaign(scenarios: Sequence[Scenario],
         index[sig] = {"lanes": bucket.lanes_padded_to,
                       "scenarios": [j.scenario.name
                                     for j in bucket.jobs]}
-        bucket.dispatch()
-        inflight.append(bucket)
-        while len(inflight) > max(window, 1):
-            inflight.pop(0).drain(out_dir, write, specific_fanout)
-    while inflight:
-        inflight.pop(0).drain(out_dir, write, specific_fanout)
+    execute_buckets(buckets.values(), out_dir, write=write,
+                    specific_fanout=specific_fanout, window=window)
 
     # host-driven schemas (random search, Table 3) run sequentially
     # after the bucketed fleet — they were never device-hot paths

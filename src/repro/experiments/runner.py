@@ -65,7 +65,6 @@ import dataclasses
 import json
 import os
 import time
-import warnings
 from typing import Callable, Dict, List, Optional, Tuple
 
 import jax
@@ -132,29 +131,19 @@ def load_cached_result(scenario: Scenario, out_dir: str, seed: int,
     return None
 
 
-def make_scorer(space: SearchSpace, wa: WorkloadArrays,
-                objective: Objective, *, n_calib: int = 32,
-                calib_k: int = 256,
-                backend: str = "auto") -> Tuple[Callable, Callable]:
-    """Deprecated: use ``core.scoring.build_scorer`` and read
-    ``scorer.score_host`` / ``scorer.evaluator``.
+def make_scorer(*_args, **_kwargs):
+    """Removed (was a DeprecationWarning wrapper). Build through the
+    unified constructor and read the host-facing surfaces::
 
-    Kept as a thin wrapper so host-driven callers migrate
-    incrementally; scores are identical by construction
-    (tests/test_scoring.py pins this). Note one improvement inherited
-    from build_scorer: ``edap_acc`` objectives now shard over the mesh
-    'data' axis too on multi-device runtimes (the accuracy model is
-    pure JAX)."""
-    warnings.warn("runner.make_scorer is deprecated; use "
-                  "core.scoring.build_scorer(...).score_host/.evaluator",
-                  DeprecationWarning, stacklevel=2)
-    if isinstance(objective, MultiObjective):
-        raise TypeError("make_scorer builds scalar host scorers; "
-                        "multi-objective searches consume "
-                        "build_scorer(...).score_vec")
-    scorer = build_scorer(space, ScorerSpec(objective, workloads=wa),
+        sc = build_scorer(space, ScorerSpec(objective, workloads=wa),
                           calib=Calib(n_calib, calib_k), backend=backend)
-    return scorer.score_host, scorer.evaluator
+        score_fn, evaluator = sc.score_host, sc.evaluator
+    """
+    raise ImportError(
+        "runner.make_scorer was removed; use core.scoring.build_scorer"
+        "(space, ScorerSpec(objective, workloads=wa)) and read "
+        ".score_host / .evaluator (or import build_scorer from "
+        "repro.api)")
 
 
 # The traced-closure bundle is now core.scoring.Scorer; the old name
@@ -162,28 +151,15 @@ def make_scorer(space: SearchSpace, wa: WorkloadArrays,
 TracedScorer = Scorer
 
 
-def make_traced_scorer(space: SearchSpace, wa: Optional[WorkloadArrays],
-                       objective: Objective,
-                       constants: HWConstants = HWConstants(), *,
-                       n_calib: int = 32,
-                       calib_k: int = 256,
-                       builder=None,
-                       backend: str = "auto") -> Scorer:
-    """Deprecated: use ``core.scoring.build_scorer``.
-
-    ``builder`` (a core.workloads.WorkloadBuilder) switches the cost
-    path to the joint genome-slice evaluator: workload tensors become a
-    traced function of each genome's arch slice, and the accuracy model
-    reads per-genome base accuracy from the same builder. ``wa`` is
-    ignored on that path (pass None)."""
-    warnings.warn("runner.make_traced_scorer is deprecated; use "
-                  "core.scoring.build_scorer",
-                  DeprecationWarning, stacklevel=2)
-    return build_scorer(
-        space,
-        ScorerSpec(objective, workloads=wa, builder=builder,
-                   constants=constants),
-        calib=Calib(n_calib, calib_k), backend=backend)
+def make_traced_scorer(*_args, **_kwargs):
+    """Removed (was a DeprecationWarning wrapper). ``build_scorer``
+    returns the Scorer directly; the ``builder=`` joint genome-slice
+    path moved into ``ScorerSpec(objective, builder=...)``."""
+    raise ImportError(
+        "runner.make_traced_scorer was removed; use core.scoring."
+        "build_scorer(space, ScorerSpec(objective, workloads=wa, "
+        "builder=builder), calib=Calib(n_calib, calib_k)) (or import "
+        "build_scorer from repro.api)")
 
 
 def _search_mesh(n_searches: int):

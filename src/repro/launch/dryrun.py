@@ -261,9 +261,9 @@ def lower_cell(cfg: ArchConfig, shape_name: str, mesh: Mesh,
 def lower_imc_search(mesh: Mesh, population: int = 8192):
     """The paper's own technique as a dry-run cell: mesh-sharded
     population evaluation of the IMC cost model (core/distributed.py)."""
-    from ..core import (Objective, get_space, pack, get_workload_set,
-                        PAPER_4)
-    from ..core.scoring import ScorerSpec, build_scorer, sharded_score_fn
+    from ..api import (PAPER_4, Objective, ScorerSpec, build_scorer,
+                       get_space, get_workload_set, pack,
+                       sharded_score_fn)
     space = get_space("rram")
     wl = pack(get_workload_set(PAPER_4))
     built = build_scorer(space,

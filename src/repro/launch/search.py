@@ -19,10 +19,9 @@ from __future__ import annotations
 import argparse
 import json
 
+from ..api import (DEFAULT_OUT_DIR, PAPER_4, PAPER_9, Budget,
+                   Scenario, get_scenario, run_scenario)
 from ..configs import ARCH_IDS
-from ..core import PAPER_4, PAPER_9
-from ..experiments import (Budget, Scenario, get_scenario, run_scenario,
-                           DEFAULT_OUT_DIR)
 
 
 def build_workload_spec(spec: str):

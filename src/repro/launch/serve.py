@@ -11,9 +11,9 @@ import time
 import jax
 import numpy as np
 
+from ..api import LMRequest, ServeEngine
 from ..configs import get_config
 from ..models import init_params
-from ..serve import Request, ServeEngine
 
 
 def main() -> None:
@@ -37,7 +37,7 @@ def main() -> None:
     t0 = time.perf_counter()
     for i in range(args.requests):
         plen = int(rng.integers(4, 24))
-        engine.submit(Request(
+        engine.submit(LMRequest(
             rid=i, prompt=rng.integers(0, cfg.vocab_size, plen,
                                        dtype=np.int64).astype(np.int32),
             max_new_tokens=args.max_new))

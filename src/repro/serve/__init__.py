@@ -1,1 +1,21 @@
-from .engine import Request, ServeEngine
+"""Serving: the LM continuous-batching engine (engine.py) and the
+co-design search service (codesign.py). The supported import path for
+both is the ``repro.api`` facade."""
+from .engine import LMRequest, ServeEngine
+
+__all__ = ["LMRequest", "ServeEngine", "CodesignService", "Request"]
+
+
+def __getattr__(name: str):
+    if name == "Request":  # pre-PR-9 name of LMRequest
+        import warnings
+        warnings.warn("repro.serve.Request was renamed to LMRequest",
+                      DeprecationWarning, stacklevel=2)
+        return LMRequest
+    if name == "CodesignService":
+        # lazy: the search service pulls the experiments stack, which
+        # LM-only consumers of ServeEngine must not pay for
+        from .codesign import CodesignService
+        return CodesignService
+    raise AttributeError(
+        f"module {__name__!r} has no attribute {name!r}")

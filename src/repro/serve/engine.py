@@ -12,7 +12,8 @@ the engine is architecture-agnostic.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, List, Optional
+from collections import deque
+from typing import Any, Deque, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -23,13 +24,26 @@ from ..models.transformer import decode_step, init_cache, prefill
 
 
 @dataclasses.dataclass
-class Request:
+class LMRequest:
+    """One LM generation request. Named LMRequest (not Request) so the
+    token-serving type never collides with the co-design service's
+    repro.api.SearchRequest."""
     rid: int
     prompt: np.ndarray               # (S,) int32
     max_new_tokens: int = 16
     eos_id: Optional[int] = None
     # filled by the engine
     output: Optional[List[int]] = None
+
+
+def __getattr__(name: str):
+    if name == "Request":  # pre-PR-9 name
+        import warnings
+        warnings.warn("repro.serve.engine.Request was renamed to "
+                      "LMRequest", DeprecationWarning, stacklevel=2)
+        return LMRequest
+    raise AttributeError(
+        f"module {__name__!r} has no attribute {name!r}")
 
 
 class ServeEngine:
@@ -43,17 +57,17 @@ class ServeEngine:
         self.cache = init_cache(cfg, n_slots, max_len)
         self.positions = np.zeros((n_slots,), np.int32)
         self.active = np.zeros((n_slots,), bool)
-        self.slot_req: List[Optional[Request]] = [None] * n_slots
-        self.queue: List[Request] = []
-        self.done: Dict[int, Request] = {}
+        self.slot_req: List[Optional[LMRequest]] = [None] * n_slots
+        self.queue: Deque[LMRequest] = deque()
+        self.done: Dict[int, LMRequest] = {}
         self._decode = jax.jit(
             lambda p, tok, cache, pos: decode_step(p, cfg, tok, cache, pos))
 
     # -- public API ---------------------------------------------------------
-    def submit(self, req: Request) -> None:
+    def submit(self, req: LMRequest) -> None:
         self.queue.append(req)
 
-    def run(self, max_iters: int = 10_000) -> Dict[int, Request]:
+    def run(self, max_iters: int = 10_000) -> Dict[int, LMRequest]:
         it = 0
         while (self.queue or self.active.any()) and it < max_iters:
             self._admit()
@@ -66,7 +80,7 @@ class ServeEngine:
         for slot in range(self.n_slots):
             if self.active[slot] or not self.queue:
                 continue
-            req = self.queue.pop(0)
+            req = self.queue.popleft()
             req.output = []
             batch = {"tokens": jnp.asarray(req.prompt[None, :], jnp.int32)}
             last_logits, pcache = prefill(self.params, self.cfg, batch,

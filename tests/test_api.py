@@ -1,0 +1,121 @@
+"""repro.api: the public facade is complete, lazily safe, and the
+only path examples/ and launch/ import the co-design stack through."""
+import os
+
+import pytest
+
+import repro.api as api
+
+REPO_ROOT = os.path.join(os.path.dirname(__file__), os.pardir)
+
+# modules whose internals are fair game for examples/launchers: the LM
+# model zoo + infra is not part of the co-design facade
+_ALLOWED_INTERNAL = ("api", "configs", "models", "kernels", "train",
+                     "data", "parallel", "checkpoint", "launch")
+# the co-design stack: only reachable through repro.api
+_FACADE_ONLY = ("core", "experiments", "serve")
+
+
+def test_all_exports_resolve():
+    """Every __all__ name imports (including the lazy serve-layer
+    ones) and dir() advertises them."""
+    for name in api.__all__:
+        assert getattr(api, name) is not None, name
+        assert name in dir(api)
+    with pytest.raises(AttributeError, match="no attribute"):
+        api.not_a_real_export
+
+
+def test_facade_covers_the_public_story():
+    """The names the README/examples/launchers rely on are exported."""
+    for name in ("build_scorer", "Scenario", "Budget", "run_campaign",
+                 "run_scenario", "plan_campaign", "CodesignService",
+                 "SearchRequest", "SearchResponse", "ProgressEvent",
+                 "ServiceStats", "resolve_request", "ServeEngine",
+                 "LMRequest", "get_scenario", "enable_persistent_cache",
+                 "SMOKE_BUDGET", "DEFAULT_OUT_DIR"):
+        assert name in api.__all__, name
+
+
+def test_schema_types_come_from_api_not_serve():
+    """The wire schema lives in the facade; the service implementation
+    imports it from there (never the reverse at import time)."""
+    from repro.serve import codesign
+    assert codesign.SearchRequest is api.SearchRequest
+    assert codesign.SearchResponse is api.SearchResponse
+    assert codesign.ProgressEvent is api.ProgressEvent
+    from repro.serve import engine
+    assert api.LMRequest is engine.LMRequest
+
+
+def _import_targets(path):
+    """(lineno, module) for every import in a file, package-relative
+    imports resolved against repro."""
+    import ast
+    with open(path) as f:
+        tree = ast.parse(f.read())
+    out = []
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            out += [(node.lineno, a.name) for a in node.names]
+        elif isinstance(node, ast.ImportFrom):
+            mod = node.module or ""
+            if node.level:  # relative: ..x from repro/launch -> repro.x
+                mod = "repro." + mod if mod else "repro"
+            out.append((node.lineno, mod))
+    return out
+
+
+def test_examples_and_launch_import_only_through_api():
+    """examples/ and launch/ must not reach into repro.core /
+    repro.experiments / repro.serve directly — repro.api is the
+    supported import path (the LM model zoo stays direct)."""
+    files = []
+    for sub in ("examples", os.path.join("src", "repro", "launch")):
+        d = os.path.join(REPO_ROOT, sub)
+        files += [os.path.join(d, n) for n in sorted(os.listdir(d))
+                  if n.endswith(".py")]
+    assert len(files) >= 8
+    bad = []
+    for path in files:
+        for lineno, mod in _import_targets(path):
+            parts = mod.split(".")
+            if parts[0] != "repro" or len(parts) == 1:
+                continue
+            if parts[1] in _FACADE_ONLY:
+                bad.append(f"{os.path.relpath(path, REPO_ROOT)}:"
+                           f"{lineno} imports {mod}")
+    assert not bad, ("import through repro.api instead:\n  "
+                     + "\n  ".join(bad))
+
+
+def test_allowed_internal_list_is_exact():
+    """Every repro submodule is classified: facade-only or allowed
+    internal — a new top-level package must pick a side."""
+    pkg = os.path.join(REPO_ROOT, "src", "repro")
+    subs = {n[:-3] if n.endswith(".py") else n
+            for n in os.listdir(pkg)
+            if not n.startswith("_") and (n.endswith(".py") or
+                                          os.path.isdir(os.path.join(pkg, n)))}
+    assert subs == set(_ALLOWED_INTERNAL) | set(_FACADE_ONLY), subs
+
+
+def test_api_module_is_light_on_serve():
+    """Importing repro.api must not import the LM serving stack (the
+    schema stays usable without model weights in the process)."""
+    import subprocess
+    import sys
+    code = ("import sys; sys.path.insert(0, 'src'); import repro.api; "
+            "assert 'repro.serve.engine' not in sys.modules, 'eager'; "
+            "assert 'repro.serve.codesign' not in sys.modules, 'eager'; "
+            "from repro.api import CodesignService; "
+            "assert 'repro.serve.codesign' in sys.modules")
+    r = subprocess.run([sys.executable, "-c", code], cwd=REPO_ROOT,
+                       capture_output=True, text=True)
+    assert r.returncode == 0, r.stderr
+
+
+def test_request_statuses_are_versioned():
+    assert api.API_SCHEMA_VERSION == 1
+    assert set(api.RESPONSE_STATUSES) == {"completed", "cancelled",
+                                          "expired", "failed"}

@@ -23,7 +23,8 @@ from repro.core.cost_model import (CostMetrics, HWConstants, _resolve,
                                    evaluate_population)
 from repro.core.search_space import (TECH_COST_ALPHA, TECH_NODES_NM,
                                      TECH_VMIN, TECH_VMAX, V_NOM)
-from repro.experiments import get_scenario, make_traced_scorer, scenario_names
+from repro.core import ScorerSpec, build_scorer
+from repro.experiments import get_scenario, scenario_names
 
 # ---------------------------------------------------------------------------
 # verbatim pre-refactor evaluate_population (commit eac9b20 lineage)
@@ -195,7 +196,7 @@ def test_search_trajectory_bit_identical(scenario):
     obj = make_objective(sc.objective)
     table = jnp.asarray(space.value_table())
 
-    traced = make_traced_scorer(space, wa, obj)
+    traced = build_scorer(space, ScorerSpec(obj, workloads=wa))
 
     def ref_score(g):
         return obj(_reference_evaluate_population(space, wa, g,

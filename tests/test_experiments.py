@@ -9,9 +9,10 @@ import numpy as np
 import pytest
 
 from repro.core import make_objective, random_search, get_space
+from repro.core import Calib, ScorerSpec, build_scorer
 from repro.experiments import (Budget, Scenario, compute_gap,
                                baseline_reductions, get_scenario,
-                               make_traced_scorer, render_markdown,
+                               render_markdown,
                                render_summary, run_scenario,
                                run_specific_fanout,
                                run_specific_sequential, scenario_names)
@@ -194,7 +195,7 @@ def test_specific_fanout_matches_sequential(objective, tech):
     wls = sc.resolve_workloads()
     from repro.core import make_objective, pack
     obj = make_objective(sc.objective)
-    traced = make_traced_scorer(space, pack(wls), obj)
+    traced = build_scorer(space, ScorerSpec(obj, workloads=pack(wls)))
     seeds = [0, 1]
     fan = run_specific_fanout(sc, space, traced, seeds, len(wls))
     seq = run_specific_sequential(sc, space, obj, wls, seeds)
@@ -315,13 +316,13 @@ def test_mo_rejects_non_fourphase():
         run_mo_search_batched(sc, sc.space(), None, [0])
 
 
-def test_make_scorer_rejects_multi_objective():
+def test_removed_scorer_constructors_raise():
+    """The pre-build_scorer constructors survive only as ImportError
+    stubs pointing at the unified API."""
     from repro.experiments import make_scorer
-    from repro.core import pack, get_workload_set
-    sp = TINY_MO.space()
-    wa = pack(get_workload_set(TINY_MO.workloads))
-    with pytest.raises(TypeError, match="score_vec"):
-        make_scorer(sp, wa, make_objective(TINY_MO.objective))
+    with pytest.raises(ImportError, match="build_scorer"):
+        make_scorer(TINY_MO.space(), None,
+                    make_objective(TINY_MO.objective))
 
 
 def test_calib_is_part_of_cache_key(tmp_path):
@@ -348,11 +349,10 @@ def test_calib_fields_reach_accuracy_model():
     from repro.core import pack
     obj = make_objective(sc.objective)
     g = np.zeros((4, space.n_params), np.int32)
-    a = make_traced_scorer(space, pack(wls), obj, n_calib=8,
-                           calib_k=128).accuracy(g)
-    b = make_traced_scorer(space, pack(wls), obj, n_calib=8,
-                           calib_k=128).accuracy(g)
-    c = make_traced_scorer(space, pack(wls), obj).accuracy(g)
+    spec = ScorerSpec(obj, workloads=pack(wls))
+    a = build_scorer(space, spec, calib=Calib(8, 128)).accuracy(g)
+    b = build_scorer(space, spec, calib=Calib(8, 128)).accuracy(g)
+    c = build_scorer(space, spec).accuracy(g)
     np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
     assert not np.array_equal(np.asarray(a), np.asarray(c))
 

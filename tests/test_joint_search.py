@@ -22,7 +22,8 @@ from repro.core import (evaluate_population, evaluate_population_joint,
 from repro.core.workloads import (PAPER_4, FAMILY_NAMES, get_family,
                                   make_workload_builder, resnet_family,
                                   vit_family)
-from repro.experiments import get_scenario, make_traced_scorer, run_scenario
+from repro.core import ScorerSpec, build_scorer
+from repro.experiments import get_scenario, run_scenario
 from repro.experiments.report import render_markdown
 
 
@@ -190,8 +191,8 @@ def test_optimal_arch_differs_across_hw_operating_points():
     fam = resnet_family()
     sp = joint_space(get_space("rram"), [fam])
     obj = make_objective("edap:mean", min_accuracy=0.60)
-    traced = make_traced_scorer(sp, None, obj,
-                                builder=make_workload_builder(sp, [fam]))
+    traced = build_scorer(sp, ScorerSpec(
+        obj, builder=make_workload_builder(sp, [fam])))
     score = jax.jit(traced.score)
     arch = np.asarray(list(itertools.product(
         *[range(c) for c in sp.cardinalities[sp.n_hw:]])), np.int32)

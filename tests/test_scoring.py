@@ -88,40 +88,26 @@ def test_build_scorer_rejects_unknown_backend():
 
 
 # ---------------------------------------------------------------------------
-# deprecated wrappers: identical scores, visible deprecation
+# removed constructors: actionable ImportError stubs
 # ---------------------------------------------------------------------------
 
-def test_deprecated_wrappers_score_identically():
-    """runner.make_scorer / runner.make_traced_scorer /
-    distributed.make_sharded_scorer are thin shims over build_scorer:
-    same scores bit-for-bit, plus a DeprecationWarning each."""
+def test_removed_constructors_raise_with_migration_hint():
+    """The pre-build_scorer constructors are gone: the stubs raise an
+    ImportError naming core.scoring.build_scorer whatever the call
+    signature, instead of silently delegating."""
     from repro.core.distributed import make_sharded_scorer
     from repro.experiments import make_scorer, make_traced_scorer
 
     sp, wa, obj = _setup()
-    g = _genomes(sp, jax.device_count() * 4)
-    want = np.asarray(build_scorer(
-        sp, ScorerSpec(obj, workloads=wa), backend="jnp").score_host(g))
-
-    with pytest.warns(DeprecationWarning):
-        score_fn, evaluator = make_scorer(sp, wa, obj, backend="jnp")
-    np.testing.assert_array_equal(np.asarray(score_fn(g)), want)
-    assert np.asarray(evaluator(g).feasible).shape == (g.shape[0],)
-
-    with pytest.warns(DeprecationWarning):
-        traced = make_traced_scorer(sp, wa, obj, backend="jnp")
-    assert isinstance(traced, Scorer)
-    np.testing.assert_array_equal(np.asarray(jax.jit(traced.score)(g)),
-                                  want)
-
     mesh = jax.make_mesh((jax.device_count(),), ("data",))
-    with pytest.warns(DeprecationWarning):
-        sharded = make_sharded_scorer(sp, wa, obj, mesh, backend="jnp")
-    np.testing.assert_array_equal(np.asarray(sharded(g)), want)
-    # the dry-run contract survives the rewrite
-    assert hasattr(sharded, "lowerable") and hasattr(sharded,
-                                                    "in_sharding")
-    sharded.lowerable.lower(g).compile()
+    for call in (lambda: make_scorer(sp, wa, obj, backend="jnp"),
+                 lambda: make_traced_scorer(sp, wa, obj),
+                 lambda: make_sharded_scorer(sp, wa, obj, mesh),
+                 lambda: make_scorer(),
+                 lambda: make_traced_scorer(),
+                 lambda: make_sharded_scorer()):
+        with pytest.raises(ImportError, match="build_scorer"):
+            call()
 
 
 def test_sharded_scorer_threads_accuracy():
@@ -170,20 +156,26 @@ def test_backend_in_result_cache_key(tmp_path):
 
 
 def test_runner_uses_build_scorer_only():
-    """API-consolidation acceptance: the runner, distributed, and nsga
-    modules construct scorers exclusively through build_scorer — the
-    deprecated constructors survive only as wrappers (their bodies
-    delegate), never as call sites."""
+    """API-consolidation acceptance: the runner, distributed, nsga,
+    campaign, and service modules construct scorers exclusively
+    through build_scorer — the removed constructors survive only as
+    raising stubs, never as call sites."""
     import inspect
 
     from repro.core import distributed, nsga
-    from repro.experiments import runner
+    from repro.experiments import campaign, runner
+    from repro.serve import codesign
 
-    for mod in (runner, distributed, nsga):
+    for mod in (runner, distributed, nsga, campaign, codesign):
         src = inspect.getsource(mod)
         calls = [ln for ln in src.splitlines()
                  if ("make_scorer(" in ln or "make_traced_scorer(" in ln
                      or "make_sharded_scorer(" in ln)
                  and "def " not in ln]
-        assert not calls, f"{mod.__name__} still calls a deprecated " \
+        assert not calls, f"{mod.__name__} still calls a removed " \
                           f"constructor: {calls}"
+    # and the stubs themselves raise (not delegate)
+    for fn in (runner.make_scorer, runner.make_traced_scorer,
+               distributed.make_sharded_scorer):
+        with pytest.raises(ImportError, match="build_scorer"):
+            fn()

@@ -5,7 +5,7 @@ import pytest
 
 from conftest import tiny_config
 from repro.models import decode_step, init_params, prefill
-from repro.serve import Request, ServeEngine
+from repro.api import LMRequest, ServeEngine
 
 
 def _greedy_reference(params, cfg, prompt, n_new):
@@ -28,7 +28,7 @@ def test_engine_matches_single_request_reference(key):
     prompt = np.arange(7, dtype=np.int32) % cfg.vocab_size
     ref = _greedy_reference(params, cfg, prompt, 6)
     eng = ServeEngine(params, cfg, n_slots=2, max_len=128)
-    eng.submit(Request(rid=0, prompt=prompt, max_new_tokens=6))
+    eng.submit(LMRequest(rid=0, prompt=prompt, max_new_tokens=6))
     done = eng.run()
     assert done[0].output == ref
 
@@ -39,7 +39,7 @@ def test_engine_continuous_batching_all_complete(key):
     eng = ServeEngine(params, cfg, n_slots=2, max_len=64)
     rng = np.random.default_rng(0)
     for i in range(6):
-        eng.submit(Request(
+        eng.submit(LMRequest(
             rid=i,
             prompt=rng.integers(0, cfg.vocab_size, 4 + i).astype(np.int32),
             max_new_tokens=5))
@@ -58,7 +58,7 @@ def test_engine_isolation_between_slots(key):
     refs = [_greedy_reference(params, cfg, p, 4) for p in prompts]
     eng = ServeEngine(params, cfg, n_slots=3, max_len=64)
     for i, p in enumerate(prompts):
-        eng.submit(Request(rid=i, prompt=p, max_new_tokens=4))
+        eng.submit(LMRequest(rid=i, prompt=p, max_new_tokens=4))
     done = eng.run()
     for i in range(3):
         assert done[i].output == refs[i], i
@@ -69,3 +69,21 @@ def test_encoder_arch_rejected(key):
     params, _ = init_params(key, cfg)
     with pytest.raises(AssertionError):
         ServeEngine(params, cfg)
+
+
+def test_request_rename_shim_warns(key):
+    """The pre-PR-9 name still imports (with a DeprecationWarning) and
+    is the same class; the engine's FIFO is an O(1)-popleft deque."""
+    from collections import deque
+
+    with pytest.warns(DeprecationWarning, match="LMRequest"):
+        from repro.serve import Request
+    assert Request is LMRequest
+    with pytest.warns(DeprecationWarning, match="LMRequest"):
+        from repro.serve.engine import Request as EngineRequest
+    assert EngineRequest is LMRequest
+
+    cfg = tiny_config(n_layers=2)
+    params, _ = init_params(key, cfg)
+    eng = ServeEngine(params, cfg, n_slots=2, max_len=32)
+    assert isinstance(eng.queue, deque)
