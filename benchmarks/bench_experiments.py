@@ -97,10 +97,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (ScorerSpec, build_scorer, make_objective, pack,
-                        random_genomes, search_kernel, phase_schedule,
-                        FOUR_PHASES, joint_search)
-from repro.experiments import get_scenario, run_scenario
+from repro.api import (ScorerSpec, build_scorer, get_scenario,
+                       joint_search, make_objective, pack,
+                       run_scenario)
+from repro.core import (FOUR_PHASES, phase_schedule, random_genomes,
+                        search_kernel)
 
 from .common import Bench
 

@@ -22,8 +22,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (Objective, PAPER_4, PAPER_9,
-                        get_workload_set)
+from repro.api import Objective, PAPER_4, PAPER_9, get_workload_set
 from repro.core.nonideal import make_accuracy_model
 from repro.core.objectives import per_workload_scores
 from repro.core.pareto import edap_cost_front

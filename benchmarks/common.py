@@ -14,10 +14,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (Objective, PAPER_4, SearchResult,
-                        from_arch_config, get_space, get_workload_set,
-                        joint_search, make_evaluator, pack,
-                        plain_ga_search)
+from repro.api import (Objective, PAPER_4, get_space,
+                       get_workload_set, joint_search, make_evaluator,
+                       pack)
+from repro.core import SearchResult, from_arch_config, plain_ga_search
 from repro.core.objectives import per_workload_scores
 
 P_H, P_E, P_GA, G = 300, 120, 24, 4

@@ -1,0 +1,20 @@
+"""Trace-safety analysis suite: repo-specific AST lint (R001-R004,
+pure stdlib) + jaxpr purity/recompilation/bloat audit (J001-J003,
+needs jax). CLI: ``python -m repro.analysis --all``; see
+docs/architecture.md ("Static analysis") for the rule table and the
+suppression format."""
+from .findings import (Finding, Suppression, SUPPRESSION_FILE,
+                       apply_suppressions, load_suppressions,
+                       parse_suppressions)
+from .ast_rules import (ALLOWED_INTERNAL, FACADE_ONLY, FACADE_SCAN_DIRS,
+                        check_cache_key, check_deprecated, check_facade,
+                        check_facade_source, check_traced_purity,
+                        run_ast_rules)
+
+__all__ = [
+    "ALLOWED_INTERNAL", "FACADE_ONLY", "FACADE_SCAN_DIRS", "Finding",
+    "SUPPRESSION_FILE", "Suppression", "apply_suppressions",
+    "check_cache_key", "check_deprecated", "check_facade",
+    "check_facade_source", "check_traced_purity", "load_suppressions",
+    "parse_suppressions", "run_ast_rules",
+]

@@ -1,0 +1,109 @@
+"""CLI of the trace-safety analysis suite.
+
+    python -m repro.analysis --ast            # R001-R004 (stdlib only)
+    python -m repro.analysis --jaxpr          # J001-J003 (needs jax)
+    python -m repro.analysis --all            # both; the CI gate
+    python -m repro.analysis --all --report analysis_report.json
+    python -m repro.analysis --jaxpr --update-baseline
+
+Exit status is nonzero iff any unsuppressed ERROR finding remains
+(warnings — stale suppressions, missing baseline entries — print but
+pass). Suppressions live in ``analysis/suppressions.txt``; every line
+needs a justification comment (see repro.analysis.findings).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from typing import List
+
+from .ast_rules import run_ast_rules
+from .findings import Finding, apply_suppressions, load_suppressions
+
+
+def repo_root_of(start: str) -> str:
+    """Nearest ancestor holding the repo markers (pyproject + src)."""
+    d = os.path.abspath(start)
+    while True:
+        if os.path.exists(os.path.join(d, "pyproject.toml")) \
+                and os.path.isdir(os.path.join(d, "src")):
+            return d
+        parent = os.path.dirname(d)
+        if parent == d:
+            raise SystemExit(
+                f"cannot find the repo root above {start!r} "
+                "(looked for pyproject.toml + src/)")
+        d = parent
+
+
+def main(argv: List[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="trace-safety static analysis (AST lint + jaxpr "
+                    "audit)")
+    ap.add_argument("--ast", action="store_true",
+                    help="run the AST rules R001-R004")
+    ap.add_argument("--jaxpr", action="store_true",
+                    help="run the jaxpr audit J001-J003 (needs jax)")
+    ap.add_argument("--all", action="store_true",
+                    help="run both layers (the CI gate)")
+    ap.add_argument("--root", default=".",
+                    help="repo root (default: discovered from cwd)")
+    ap.add_argument("--report", default=None, metavar="PATH",
+                    help="write the full report (findings + per-kernel "
+                         "primitive counts) as JSON")
+    ap.add_argument("--update-baseline", action="store_true",
+                    help="rewrite analysis/baseline.json from the "
+                         "current jaxpr lowerings (implies --jaxpr)")
+    args = ap.parse_args(argv)
+    if args.update_baseline:
+        args.jaxpr = True
+    if args.all:
+        args.ast = args.jaxpr = True
+    if not (args.ast or args.jaxpr):
+        args.ast = True  # cheap default; --all is the CI gate
+
+    root = repo_root_of(args.root)
+    findings: List[Finding] = []
+    report = {"ast": args.ast, "jaxpr": args.jaxpr}
+
+    if args.ast:
+        findings += run_ast_rules(root)
+    if args.jaxpr:
+        from .jaxpr_audit import run_jaxpr_audit
+        jfindings, jreport = run_jaxpr_audit(
+            root, update_baseline=args.update_baseline)
+        findings += jfindings
+        report["jaxpr_audit"] = jreport
+
+    # staleness is only decidable for rule families that actually ran
+    # (an R003 suppression is not stale just because --jaxpr skipped
+    # the AST layer)
+    ran = ("R" if args.ast else "") + ("J" if args.jaxpr else "")
+    sups, problems = load_suppressions(root)
+    sups = [s for s in sups if s.rule[:1] in ran]
+    kept, suppressed, stale = apply_suppressions(findings, sups)
+    kept += problems + stale
+
+    errors = [f for f in kept if f.severity == "error"]
+    warnings = [f for f in kept if f.severity != "error"]
+    for f in errors + warnings:
+        tag = "error" if f.severity == "error" else "warning"
+        print(f"{tag}: {f.format()}")
+    print(f"analysis: {len(errors)} error(s), {len(warnings)} "
+          f"warning(s), {len(suppressed)} suppressed")
+
+    report["findings"] = [f.asdict() for f in kept]
+    report["suppressed"] = [f.asdict() for f in suppressed]
+    if args.report:
+        with open(args.report, "w") as f:
+            json.dump(report, f, indent=1, sort_keys=True)
+            f.write("\n")
+        print(f"report written to {args.report}")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,132 @@
+"""Findings and the suppression file of the static-analysis suite.
+
+A :class:`Finding` is one rule violation at one location. Findings can
+be suppressed through a plain-text suppression file (``analysis/
+suppressions.txt`` at the repo root — plain text, not TOML, because
+the CI matrix includes Python 3.10 which has no ``tomllib``). Format,
+one suppression per line::
+
+    R001 src/repro/core/foo.py:make_thing.score  # why this is fine
+    R003 benchmarks/bench_paper.py               # measures internals
+
+``RULE path[:symbol]  # justification``. The symbol suffix narrows the
+suppression to one function (qualname match, or a dotted prefix of
+one); without it the whole file is suppressed for that rule. The
+justification comment is MANDATORY — a suppression without one is
+itself an error finding, so every silenced rule carries its reason in
+the file. Suppressions that match nothing are reported as warnings
+(stale entries rot fast otherwise).
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+from typing import Iterable, List, Sequence, Tuple
+
+SUPPRESSION_FILE = os.path.join("analysis", "suppressions.txt")
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One rule violation at one location."""
+    rule: str               # "R001".."R004", "J001".."J003"
+    path: str               # repo-relative, forward slashes
+    line: int
+    symbol: str             # qualname of the offending function, or ""
+    message: str
+    severity: str = "error"  # "error" fails the build; "warning" reports
+
+    def format(self) -> str:
+        sym = f" [{self.symbol}]" if self.symbol else ""
+        return f"{self.path}:{self.line}: {self.rule}{sym} {self.message}"
+
+    def asdict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass(frozen=True)
+class Suppression:
+    rule: str
+    path: str
+    symbol: str             # "" suppresses the whole file for the rule
+    justification: str
+    line: int               # line number inside the suppression file
+
+    def matches(self, f: Finding) -> bool:
+        if f.rule != self.rule or f.path != self.path:
+            return False
+        if not self.symbol:
+            return True
+        return (f.symbol == self.symbol
+                or f.symbol.startswith(self.symbol + "."))
+
+
+def parse_suppressions(
+        text: str, source: str = SUPPRESSION_FILE,
+) -> Tuple[List[Suppression], List[Finding]]:
+    """Parse the suppression file; malformed lines come back as error
+    findings against the file itself (never silently ignored)."""
+    sups: List[Suppression] = []
+    problems: List[Finding] = []
+    for i, raw in enumerate(text.splitlines(), start=1):
+        line = raw.strip()
+        if not line or line.startswith("#"):
+            continue
+        body, _, comment = line.partition("#")
+        justification = comment.strip()
+        parts = body.split()
+        if len(parts) != 2:
+            problems.append(Finding(
+                rule="R000", path=source, line=i, symbol="",
+                message=f"malformed suppression line: {raw.strip()!r} "
+                        "(expected 'RULE path[:symbol]  # justification')"))
+            continue
+        rule, target = parts
+        path, _, symbol = target.partition(":")
+        if not justification:
+            problems.append(Finding(
+                rule="R000", path=source, line=i, symbol="",
+                message=f"suppression for {rule} {target} has no "
+                        "justification comment (mandatory: explain WHY "
+                        "after '#')"))
+            continue
+        sups.append(Suppression(rule=rule, path=path, symbol=symbol,
+                                justification=justification, line=i))
+    return sups, problems
+
+
+def load_suppressions(repo_root: str) -> Tuple[List[Suppression],
+                                               List[Finding]]:
+    path = os.path.join(repo_root, SUPPRESSION_FILE)
+    if not os.path.exists(path):
+        return [], []
+    with open(path) as f:
+        return parse_suppressions(f.read())
+
+
+def apply_suppressions(
+        findings: Iterable[Finding], sups: Sequence[Suppression],
+        source: str = SUPPRESSION_FILE,
+) -> Tuple[List[Finding], List[Finding], List[Finding]]:
+    """Split findings into (kept, suppressed) and report stale
+    suppressions as warning findings. Returns (kept, suppressed,
+    stale_warnings)."""
+    kept: List[Finding] = []
+    suppressed: List[Finding] = []
+    used = [False] * len(sups)
+    for f in findings:
+        hit = False
+        for i, s in enumerate(sups):
+            if s.matches(f):
+                used[i] = True
+                hit = True
+        (suppressed if hit else kept).append(f)
+    stale = [
+        Finding(rule="R000", path=source, line=s.line, symbol="",
+                message=f"stale suppression ({s.rule} {s.path}"
+                        f"{':' + s.symbol if s.symbol else ''}) matches "
+                        "no current finding — remove it",
+                severity="warning")
+        for s, u in zip(sups, used) if not u
+    ]
+    return kept, suppressed, stale

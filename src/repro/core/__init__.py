@@ -40,4 +40,5 @@ from .baselines import (BASELINE_ALGORITHMS, BaselineResult,
                         run_baseline_loop, stochastic_rank)
 from .pareto import (edap_cost_front, front_coverage, hypervolume_2d,
                      pareto_front)
+from .tracing import TRACED_REGISTRY, traced_closure, traced_sites
 from . import baselines, nonideal, nsga, pareto, distributed, scoring

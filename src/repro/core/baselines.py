@@ -58,6 +58,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from .genetic import _cached_jit, _to_index
+from .tracing import traced_closure
 from .objectives import INFEASIBLE_PENALTY
 from .search_space import SearchSpace
 
@@ -115,6 +116,7 @@ class MultiBaselineResult(NamedTuple):
 
 
 def _real_scorer(score_fn: Callable, cards: jax.Array) -> Callable:
+    @traced_closure
     def score(x):
         return score_fn(_to_index(x, cards))
     return score
@@ -131,6 +133,7 @@ def pso_ops(cards: jax.Array, score_fn: Callable, n_particles: int,
     n = cards.shape[0]
     score = _real_scorer(score_fn, cards)
 
+    @traced_closure
     def init(key):
         k_x, k_v = jax.random.split(key)
         x = jax.random.uniform(k_x, (n_particles, n))
@@ -139,6 +142,7 @@ def pso_ops(cards: jax.Array, score_fn: Callable, n_particles: int,
         g = jnp.argmin(s)
         return dict(x=x, v=v, pb_x=x, pb_s=s, gb_x=x[g], gb_s=s[g])
 
+    @traced_closure
     def step(key, st):
         k1, k2 = jax.random.split(key)
         r1 = jax.random.uniform(k1, st["x"].shape)
@@ -156,6 +160,7 @@ def pso_ops(cards: jax.Array, score_fn: Callable, n_particles: int,
         gb_s = jnp.where(better, pb_s[g], st["gb_s"])
         return dict(x=x, v=v, pb_x=pb_x, pb_s=pb_s, gb_x=gb_x, gb_s=gb_s)
 
+    @traced_closure
     def best(st):
         return st["gb_x"], st["gb_s"]
 
@@ -166,6 +171,7 @@ def pso_ops(cards: jax.Array, score_fn: Callable, n_particles: int,
 # (µ+λ)-ES and SRES
 # ---------------------------------------------------------------------------
 
+@traced_closure
 def stochastic_rank(key: jax.Array, f: jax.Array, phi: jax.Array,
                     p_f: float = 0.45) -> jax.Array:
     """Runarsson & Yao stochastic ranking: (N,) permutation, best first.
@@ -214,6 +220,7 @@ def es_ops(cards: jax.Array, score_fn: Callable, mu: int, lam: int,
     n = cards.shape[0]
     tau = 1.0 / np.sqrt(2.0 * n)
 
+    @traced_closure
     def evaluate(x):
         """(score, penalty) of a real-coded batch, one decode."""
         genomes = _to_index(x, cards)
@@ -226,6 +233,7 @@ def es_ops(cards: jax.Array, score_fn: Callable, mu: int, lam: int,
             return s, penalty_fn(genomes)
         return s, jnp.where(s >= INFEASIBLE_PENALTY, 1.0, 0.0)
 
+    @traced_closure
     def init(key):
         pop = jax.random.uniform(key, (mu, n))
         s, phi = evaluate(pop)
@@ -233,6 +241,7 @@ def es_ops(cards: jax.Array, score_fn: Callable, mu: int, lam: int,
         return dict(pop=pop, sig=jnp.full((mu,), sigma0, jnp.float32),
                     s=s, phi=phi, best_x=pop[b], best_s=s[b])
 
+    @traced_closure
     def step(key, st):
         k_p, k_t, k_z, k_r = jax.random.split(key, 4)
         parents = jax.random.randint(k_p, (lam,), 0, mu)
@@ -259,6 +268,7 @@ def es_ops(cards: jax.Array, score_fn: Callable, mu: int, lam: int,
                     best_x=jnp.where(better, children[b], st["best_x"]),
                     best_s=jnp.where(better, cs[b], st["best_s"]))
 
+    @traced_closure
     def best(st):
         return st["best_x"], st["best_s"]
 
@@ -286,6 +296,7 @@ def cmaes_ops(cards: jax.Array, score_fn: Callable, lam: int,
     score = _real_scorer(score_fn, cards)
     eye = jnp.eye(n, dtype=jnp.float32)
 
+    @traced_closure
     def init(key):
         del key
         mean = jnp.full((n,), 0.5, jnp.float32)
@@ -293,6 +304,7 @@ def cmaes_ops(cards: jax.Array, score_fn: Callable, lam: int,
         return dict(mean=mean, sigma=jnp.float32(sigma0), C=eye,
                     best_x=mean, best_s=s0)
 
+    @traced_closure
     def step(key, st):
         # C stays a convex combination of PSD terms + jitter, so the
         # Cholesky is well-defined inside the trace (no host fallback)
@@ -312,11 +324,12 @@ def cmaes_ops(cards: jax.Array, score_fn: Callable, lam: int,
         y = (sel - old_mean[None]) / jnp.maximum(st["sigma"], 1e-12)
         C = 0.7 * st["C"] + 0.3 * (y.T * wts) @ y
         sigma = st["sigma"] * jnp.exp(
-            0.1 * (jnp.linalg.norm(z[b]) / np.sqrt(n) - 1.0))
+            0.1 * (jnp.linalg.norm(z[b]) / (n ** 0.5) - 1.0))
         sigma = jnp.clip(sigma, 1e-4, 1.0)
         return dict(mean=mean, sigma=sigma, C=C, best_x=best_x,
                     best_s=best_s)
 
+    @traced_closure
     def best(st):
         return st["best_x"], st["best_s"]
 
@@ -327,6 +340,7 @@ def cmaes_ops(cards: jax.Array, score_fn: Callable, lam: int,
 # G3PCX
 # ---------------------------------------------------------------------------
 
+@traced_closure
 def companion_indices(key: jax.Array, pop_size: int, n_companions: int,
                       best: jax.Array) -> jax.Array:
     """``n_companions`` distinct population indices, uniformly drawn
@@ -339,6 +353,7 @@ def companion_indices(key: jax.Array, pop_size: int, n_companions: int,
     return idx + (idx >= best)
 
 
+@traced_closure
 def pcx_offspring(key: jax.Array, p: jax.Array, companions: jax.Array,
                   n_offspring: int, sigma_zeta: float = 0.1,
                   sigma_eta: float = 0.1) -> jax.Array:
@@ -381,12 +396,14 @@ def g3pcx_ops(cards: jax.Array, score_fn: Callable, pop_size: int,
     n = cards.shape[0]
     score = _real_scorer(score_fn, cards)
 
+    @traced_closure
     def init(key):
         pop = jax.random.uniform(key, (pop_size, n))
         s = score(pop)
         b = jnp.argmin(s)
         return dict(pop=pop, s=s, best_x=pop[b], best_s=s[b])
 
+    @traced_closure
     def step(key, st):
         k_c, k_x, k_r = jax.random.split(key, 3)
         bi = jnp.argmin(st["s"])
@@ -408,6 +425,7 @@ def g3pcx_ops(cards: jax.Array, score_fn: Callable, pop_size: int,
                     best_x=jnp.where(better, kids[b], st["best_x"]),
                     best_s=jnp.where(better, ks[b], st["best_s"]))
 
+    @traced_closure
     def best(st):
         return st["best_x"], st["best_s"]
 
@@ -443,6 +461,7 @@ def make_baseline_ops(algorithm: str, cards: jax.Array,
                      f"known: {BASELINE_ALGORITHMS}")
 
 
+@traced_closure
 def baseline_scan(key: jax.Array, ops: BaselineOps, iters: int,
                   active: Optional[jax.Array] = None,
                   ) -> Tuple[jax.Array, jax.Array, jax.Array]:
@@ -484,6 +503,7 @@ def baseline_scan(key: jax.Array, ops: BaselineOps, iters: int,
     return bx, bs, jnp.concatenate([s_init[None], hist])
 
 
+@traced_closure
 def baseline_kernel(key: jax.Array, cards: jax.Array,
                     score_fn: Callable, *, algorithm: str, pop: int,
                     iters: int, penalty_fn: Optional[Callable] = None,

@@ -35,6 +35,7 @@ import jax.numpy as jnp
 
 from .search_space import (SearchSpace, TECH_COST_ALPHA, TECH_NODES_NM,
                            TECH_VMIN, TECH_VMAX, TECH_32NM_INDEX, V_NOM)
+from .tracing import traced_closure
 from .workloads import WorkloadArrays
 
 
@@ -92,6 +93,7 @@ _PARAM_DEFAULTS = {
 }
 
 
+@traced_closure
 def _resolve(space: SearchSpace, table: jax.Array, genomes: jax.Array,
              ) -> Dict[str, jax.Array]:
     """Gather parameter values for each genome: dict of (P,) arrays.
@@ -106,6 +108,7 @@ def _resolve(space: SearchSpace, table: jax.Array, genomes: jax.Array,
     return out
 
 
+@traced_closure
 def _cost_core(space: SearchSpace, c: HWConstants, p: Dict[str, jax.Array],
                *, M: jax.Array, K: jax.Array, N: jax.Array,
                seg_onehot: jax.Array, stored_weights: jax.Array,
@@ -250,6 +253,7 @@ def _cost_core(space: SearchSpace, c: HWConstants, p: Dict[str, jax.Array],
                        cost=cost, feasible_w=feasible_w)
 
 
+@traced_closure
 def evaluate_population(space: SearchSpace, wl: WorkloadArrays,
                         genomes: jax.Array,
                         constants: HWConstants = HWConstants(),
@@ -274,6 +278,7 @@ def evaluate_population(space: SearchSpace, wl: WorkloadArrays,
                       stored_weights=wl.stored_weights[None, :])
 
 
+@traced_closure
 def evaluate_population_joint(space: SearchSpace, builder,
                               genomes: jax.Array,
                               constants: HWConstants = HWConstants(),

@@ -47,6 +47,7 @@ from .search_space import SearchSpace
 # NSGA-II, the Table 3 baseline optimizers) and lives with the other
 # compilation/distribution machinery in core.distributed.
 from .distributed import cached_compile as _cached_jit
+from .tracing import traced_closure
 from . import sampling
 
 
@@ -82,15 +83,18 @@ def phase_schedule(phases: Sequence[Phase],
     return np.asarray(rows, np.float32)
 
 
+@traced_closure
 def _to_real(pop: jax.Array, cards: jax.Array) -> jax.Array:
     return (pop.astype(jnp.float32) + 0.5) / cards[None, :]
 
 
+@traced_closure
 def _to_index(x: jax.Array, cards: jax.Array) -> jax.Array:
     idx = jnp.floor(jnp.clip(x, 0.0, 1.0 - 1e-6) * cards[None, :])
     return idx.astype(jnp.int32)
 
 
+@traced_closure
 def _sbx(key: jax.Array, x1: jax.Array, x2: jax.Array, pc: jax.Array,
          eta: jax.Array) -> Tuple[jax.Array, jax.Array]:
     k_u, k_cross, k_gene = jax.random.split(key, 3)
@@ -108,6 +112,7 @@ def _sbx(key: jax.Array, x1: jax.Array, x2: jax.Array, pc: jax.Array,
     return jnp.where(m, c1, x1), jnp.where(m, c2, x2)
 
 
+@traced_closure
 def _poly_mutate(key: jax.Array, x: jax.Array, pm: jax.Array,
                  eta: jax.Array,
                  cards: jax.Array | None = None) -> jax.Array:
@@ -131,6 +136,7 @@ def _poly_mutate(key: jax.Array, x: jax.Array, pm: jax.Array,
     return jnp.clip(x + jnp.where(mask, delta, 0.0), 0.0, 1.0 - 1e-6)
 
 
+@traced_closure
 def _generation_step(key: jax.Array, pop: jax.Array, scores: jax.Array,
                      cards: jax.Array, pc: jax.Array, eta_c: jax.Array,
                      pm: jax.Array, eta_m: jax.Array) -> jax.Array:
@@ -161,6 +167,7 @@ def _generation_step(key: jax.Array, pop: jax.Array, scores: jax.Array,
 _generation_step_jit = jax.jit(_generation_step)
 
 
+@traced_closure
 def ga_scan(key: jax.Array, init_pop: jax.Array, cards: jax.Array,
             schedule: jax.Array, score_fn: Callable[[jax.Array], jax.Array],
             active: Optional[jax.Array] = None) -> Tuple[jax.Array, ...]:
@@ -221,6 +228,7 @@ def ga_scan(key: jax.Array, init_pop: jax.Array, cards: jax.Array,
     return best_g, best_s, hist, pop, scores
 
 
+@traced_closure
 def search_kernel(key: jax.Array, cards: jax.Array, schedule: jax.Array,
                   score_fn: Callable[[jax.Array], jax.Array],
                   feasible_fn: Optional[Callable] = None, *,

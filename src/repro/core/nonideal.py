@@ -48,6 +48,7 @@ from ..kernels.adc import adc_full_scale, adc_quantize
 from ..kernels.imc_fused import SIGMA_POLY  # noqa: F401  (back-compat)
 from ..kernels.imc_fused import imc_fused_gemm, ir_drop_factor, sigma_of_g
 from .search_space import SearchSpace
+from .tracing import traced_closure
 from .workloads import Workload, WorkloadArrays
 
 OUTPUT_NOISE_FRAC = 0.01  # 1% output-referred noise [58]
@@ -89,11 +90,13 @@ _SNR_SCALE_DB = 4.0
 _ACC_FLOOR = 0.35
 
 
+@traced_closure
 def apply_conductance_noise(key: jax.Array, g_norm: jax.Array) -> jax.Array:
     eps = jax.random.normal(key, g_norm.shape)
     return jnp.clip(g_norm + sigma_of_g(g_norm) * eps, 0.0, 1.0)
 
 
+@traced_closure
 def _noised_weights(k_pos: jax.Array, k_neg: jax.Array, w: jax.Array,
                     rows) -> jax.Array:
     """Differential-pair conductance mapping + variability + IR drop.
@@ -106,6 +109,7 @@ def _noised_weights(k_pos: jax.Array, k_neg: jax.Array, w: jax.Array,
     return (g_pos - g_neg) * ir_drop_factor(rows)
 
 
+@traced_closure
 def quantize_activations(x: jax.Array) -> jax.Array:
     """8-bit DAC: [0, 1] activations -> int32 codes in [0, 255]."""
     return jnp.round(jnp.clip(x, 0.0, 1.0) * 255.0).astype(jnp.int32)
@@ -148,16 +152,25 @@ def noisy_crossbar_gemm(key: jax.Array, x: jax.Array, w: jax.Array,
 # batched (vmapped, jittable) accuracy model
 # ---------------------------------------------------------------------------
 
+def flat_index_strides(space: SearchSpace) -> np.ndarray:
+    """(n,) int32 mixed-radix strides of the space — the host-time
+    constant behind ``genome_flat_index``. Traced closures must hoist
+    this (one ``jnp.asarray`` at build time) instead of recomputing the
+    ``np.cumprod`` on every trace (analysis rule R001)."""
+    cards = space.cardinalities.astype(np.int64)
+    return np.concatenate(
+        [np.cumprod(cards[::-1])[::-1][1:], [1]]).astype(np.int32)
+
+
 def genome_flat_index(space: SearchSpace, genomes: jax.Array) -> jax.Array:
     """(P, n) index genomes -> (P,) unique flat (mixed-radix) index.
 
     The per-design noise key is fold_in(base, flat_index): the same
     design draws the same noise on every path. Space sizes stay below
-    2^31 (paper: <= 1.21e7), so int32 is safe."""
-    cards = space.cardinalities.astype(np.int64)
-    strides = np.concatenate(
-        [np.cumprod(cards[::-1])[::-1][1:], [1]]).astype(np.int32)
-    return genomes @ jnp.asarray(strides)
+    2^31 (paper: <= 1.21e7), so int32 is safe. Host-facing convenience;
+    the accuracy model's traced closure precomputes the strides once
+    via ``flat_index_strides``."""
+    return genomes @ jnp.asarray(flat_index_strides(space))
 
 
 def _workload_accuracy_params(
@@ -179,6 +192,7 @@ def _workload_accuracy_params(
     return base, pen
 
 
+@traced_closure
 def _snr_to_accuracy(snr_db: jax.Array, base: jax.Array,
                      depth_pen: jax.Array) -> jax.Array:
     keep = jax.nn.sigmoid((snr_db - _SNR_MID_DB) / _SNR_SCALE_DB)
@@ -257,13 +271,18 @@ def make_accuracy_model(space: SearchSpace,
     planes = jnp.stack(
         [((xp >> b) & 1).astype(jnp.float32) for b in range(8)])
     planes = planes.reshape(8, n_calib, n_sub, sub)
-    sub_idx = jnp.arange(n_sub, dtype=jnp.float32)
+    # sub-tile start rows, prescaled by the static sub-tile height so
+    # the traced closure divides by the (traced) row count directly
+    sub_rows = jnp.arange(n_sub, dtype=jnp.float32) * sub
     group_idx = jnp.arange(n_sub, dtype=jnp.float32)
     pow2 = 2.0 ** jnp.arange(8, dtype=jnp.float32)
     if builder is None:
         base_np, pen_np = _workload_accuracy_params(workloads)
         base_acc, depth_pen = jnp.asarray(base_np), jnp.asarray(pen_np)
 
+    strides = jnp.asarray(flat_index_strides(space))
+
+    @traced_closure
     def one(genome: jax.Array, flat_idx: jax.Array) -> jax.Array:
         rows = table[rows_i, genome[rows_i]]
         bits = table[bits_i, genome[bits_i]] if bits_i is not None else 1.0
@@ -275,7 +294,7 @@ def make_accuracy_model(space: SearchSpace,
         # (8, B, n_sub, N) per-sub-tile bit-plane partial sums
         partial = jnp.einsum("qbsk,skn->qbsn", planes, wt)
         # sum sub-tiles into crossbars of `rows` rows (traced grouping)
-        grp = jnp.floor(sub_idx * float(sub) / rows)
+        grp = jnp.floor(sub_rows / rows)
         onehot = (grp[:, None] == group_idx[None, :]).astype(jnp.float32)
         tiles = jnp.einsum("qbsn,sg->qbgn", partial, onehot)
         q = adc_quantize(tiles, adc_full_scale(rows), adc_bits)
@@ -287,6 +306,7 @@ def make_accuracy_model(space: SearchSpace,
         snr_db = 10.0 * jnp.log10(sig / jnp.maximum(err, 1e-12))
         return snr_db + 10.0 * jnp.log10(cpw)  # multi-cell averaging
 
+    @traced_closure
     def _eps_fields(flat_idx):
         # the SAME draws as _noised_weights: eps on the untiled (K, N)
         # weight shape from the design's fold_in key
@@ -295,6 +315,7 @@ def make_accuracy_model(space: SearchSpace,
         return (jax.random.normal(k_pos, w.shape),
                 jax.random.normal(k_neg, w.shape), k_out)
 
+    @traced_closure
     def _add_output_noise(raw, k_out):
         y = raw / 255.0
         return y + OUTPUT_NOISE_FRAC * jnp.std(y) * \
@@ -302,6 +323,7 @@ def make_accuracy_model(space: SearchSpace,
 
     row_table_f = jnp.asarray(row_values.astype(np.float32))
 
+    @traced_closure
     def fused(genomes: jax.Array, flat: jax.Array) -> jax.Array:
         # fused dataflow: the (P, B, N) quantized outputs are the only
         # per-population intermediate that reaches HBM
@@ -327,9 +349,10 @@ def make_accuracy_model(space: SearchSpace,
 
     batched = jax.vmap(one)
 
+    @traced_closure
     def accuracy(genomes: jax.Array) -> jax.Array:
         genomes = jnp.asarray(genomes)
-        flat = genome_flat_index(space, genomes)
+        flat = genomes @ strides
         if backend == "jnp":
             snr_db = batched(genomes, flat)
         else:

@@ -60,6 +60,7 @@ import numpy as np
 from .genetic import (FOUR_PHASES, Phase, _cached_jit, _poly_mutate, _sbx,
                       _to_index, _to_real, phase_schedule)
 from .search_space import SearchSpace
+from .tracing import traced_closure
 from . import sampling
 
 
@@ -67,6 +68,7 @@ from . import sampling
 # fast non-dominated sorting + crowding (traceable)
 # ---------------------------------------------------------------------------
 
+@traced_closure
 def dominance_matrix(scores: jax.Array) -> jax.Array:
     """(N, D) minimize-all score matrix -> (N, N) bool: [i, j] is True
     iff design i dominates design j (i <= j everywhere, i < j
@@ -90,6 +92,7 @@ DOMINANCE_TILE = 256
 DOMINANCE_TILE_THRESHOLD = 512
 
 
+@traced_closure
 def dominance_matrix_tiled(scores: jax.Array,
                            tile: int = DOMINANCE_TILE) -> jax.Array:
     """``dominance_matrix`` computed in fixed-size row blocks.
@@ -116,6 +119,7 @@ def dominance_matrix_tiled(scores: jax.Array,
     return dom.reshape(-1, n)[:n]
 
 
+@traced_closure
 def nondominated_rank(scores: jax.Array,
                       tile: Optional[int] = None) -> jax.Array:
     """(N, D) scores -> (N,) int32 non-domination ranks (0 = front).
@@ -158,6 +162,7 @@ def nondominated_rank(scores: jax.Array,
     return ranks
 
 
+@traced_closure
 def crowding_distance(scores: jax.Array, ranks: jax.Array) -> jax.Array:
     """(N, D) scores + (N,) ranks -> (N,) crowding distances.
 
@@ -192,6 +197,7 @@ def crowding_distance(scores: jax.Array, ranks: jax.Array) -> jax.Array:
     return total
 
 
+@traced_closure
 def crowded_order(ranks: jax.Array, crowd: jax.Array) -> jax.Array:
     """Permutation sorting by (rank asc, crowding desc) — NSGA-II's
     total preference order (environmental selection and final report
@@ -199,6 +205,7 @@ def crowded_order(ranks: jax.Array, crowd: jax.Array) -> jax.Array:
     return jnp.lexsort((-crowd, ranks))
 
 
+@traced_closure
 def tournament_select(key: jax.Array, ranks: jax.Array, crowd: jax.Array,
                       n_winners: int) -> jax.Array:
     """Binary tournament by (rank, crowding): (n_winners,) indices."""
@@ -214,6 +221,7 @@ def tournament_select(key: jax.Array, ranks: jax.Array, crowd: jax.Array,
 # the scanned NSGA-II generation
 # ---------------------------------------------------------------------------
 
+@traced_closure
 def _nsga_generation(key: jax.Array, pop: jax.Array, scores: jax.Array,
                      cards: jax.Array, pc: jax.Array, eta_c: jax.Array,
                      pm: jax.Array, eta_m: jax.Array,
@@ -244,6 +252,7 @@ def _nsga_generation(key: jax.Array, pop: jax.Array, scores: jax.Array,
     return comb[sel], comb_scores[sel]
 
 
+@traced_closure
 def nsga_scan(key: jax.Array, init_pop: jax.Array, cards: jax.Array,
               schedule: jax.Array,
               score_vec: Callable[[jax.Array], jax.Array],
@@ -300,6 +309,7 @@ def nsga_scan(key: jax.Array, init_pop: jax.Array, cards: jax.Array,
     return pop, scores, ranks, hist
 
 
+@traced_closure
 def nsga_search_kernel(key: jax.Array, cards: jax.Array,
                        schedule: jax.Array,
                        score_vec: Callable[[jax.Array], jax.Array],

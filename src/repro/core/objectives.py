@@ -28,6 +28,7 @@ from typing import Optional, Tuple, Union
 import jax.numpy as jnp
 
 from .cost_model import CostMetrics
+from .tracing import traced_closure
 
 AREA_CONSTRAINT_MM2 = 800.0
 # Penalty score for infeasible / over-area designs. Public: the
@@ -38,6 +39,7 @@ INFEASIBLE_PENALTY = 1.0e30
 _BIG = INFEASIBLE_PENALTY
 
 
+@traced_closure
 def _agg(x, scheme: str):
     if scheme == "max":
         return jnp.max(x, axis=1)
@@ -49,6 +51,7 @@ def _agg(x, scheme: str):
     raise ValueError(scheme)
 
 
+@traced_closure
 def aggregate_scores(per_workload: jnp.ndarray, scheme: str) -> jnp.ndarray:
     """Aggregate a (P, W) per-workload score matrix over the workload
     axis (§IV-C schemes: max/mean/all) — the same reduction Objective
@@ -74,6 +77,7 @@ class Objective:
     area_constraint: float = AREA_CONSTRAINT_MM2
     min_accuracy: float = 0.0
 
+    @traced_closure
     def __call__(self, m: CostMetrics,
                  accuracy: Optional[jnp.ndarray] = None) -> jnp.ndarray:
         e_mj = _agg(m.energy * 1e3, self.aggregation)
@@ -144,6 +148,7 @@ class MultiObjective:
     def n_objectives(self) -> int:
         return len(self.components)
 
+    @traced_closure
     def __call__(self, m: CostMetrics,
                  accuracy: Optional[jnp.ndarray] = None) -> jnp.ndarray:
         return jnp.stack([o(m, accuracy=accuracy)
@@ -195,6 +200,7 @@ def make_objective(spec: str,
     return Objective(kind, agg, area_constraint, min_accuracy)
 
 
+@traced_closure
 def per_workload_scores(m: CostMetrics, kind: str = "edap",
                         accuracy: Optional[jnp.ndarray] = None,
                         ) -> jnp.ndarray:

@@ -31,8 +31,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from .search_space import SearchSpace
+from .tracing import traced_closure
 
 
+@traced_closure
 def uniform_genomes(key: jax.Array, cards: jax.Array, n: int) -> jax.Array:
     """Traceable uniform genomes from a cardinality array:
     (n, n_params) int32 of value indices."""
@@ -46,6 +48,7 @@ def random_genomes(key: jax.Array, space: SearchSpace, n: int) -> jax.Array:
     return uniform_genomes(key, jnp.asarray(space.cardinalities), n)
 
 
+@traced_closure
 def hamming_select(candidates: jax.Array, n_select: int,
                    n_valid: Optional[jax.Array] = None) -> jax.Array:
     """Greedy max-min Hamming-distance subset selection.
@@ -85,6 +88,7 @@ def hamming_select(candidates: jax.Array, n_select: int,
     return candidates[selected]
 
 
+@traced_closure
 def sample_initial_device(key: jax.Array, cards: jax.Array, p_h: int,
                           p_e: int,
                           feasible_fn: Optional[Callable] = None,

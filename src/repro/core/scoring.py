@@ -54,6 +54,7 @@ from .nonideal import resolve_backend
 from .objectives import (INFEASIBLE_PENALTY, MultiObjective, Objective,
                          per_workload_scores)
 from .search_space import SearchSpace
+from .tracing import traced_closure
 from .workloads import WorkloadArrays
 
 
@@ -172,14 +173,17 @@ def build_scorer(space: SearchSpace, spec: ScorerSpec, *,
             calib_k=calib.calib_k, backend=backend)
 
     if spec.builder is not None:
+        @traced_closure
         def metrics(genomes):
             return evaluate_population_joint(space, spec.builder, genomes,
                                              spec.constants, table)
     else:
+        @traced_closure
         def metrics(genomes):
             return evaluate_population(space, spec.workloads, genomes,
                                        spec.constants, table)
 
+    @traced_closure
     def score_full(genomes):
         m = metrics(genomes)
         if acc_fn is None:
@@ -189,18 +193,22 @@ def build_scorer(space: SearchSpace, spec: ScorerSpec, *,
     if is_mo:
         score_vec = score_full
 
+        @traced_closure
         def score(genomes):
             return score_full(genomes)[:, 0]
     else:
         score_vec = None
         score = score_full
 
+    @traced_closure
     def feasible(genomes):
         return metrics(genomes).feasible
 
+    @traced_closure
     def feasible_w(genomes, w):
         return metrics(genomes).feasible_w[:, w]
 
+    @traced_closure
     def score_w(genomes, w):
         m = metrics(genomes)
         acc = acc_fn(genomes) if acc_fn is not None else None

@@ -1,0 +1,43 @@
+"""Trace-safety markers: the ``@traced_closure`` decorator + registry.
+
+Every closure that executes INSIDE a compiled search region — scorer
+closures (core.scoring.build_scorer), GA/NSGA-II/baseline generation
+steps, the device sampler, the workload builder — must stay pure
+traced JAX: no host syncs (``.item()``, ``float()``/``int()`` on
+traced values), no per-trace ``np.*`` work, no wall-clock or Python
+RNG, no printing, no global mutation. ``@traced_closure`` marks such
+a function so the static-analysis suite (``python -m repro.analysis``,
+rule R001) audits its body; at runtime it is a zero-cost annotation —
+the function is returned unchanged.
+
+The registry is keyed by (module, qualname), so closures rebuilt per
+``build_scorer`` call overwrite their slot instead of accumulating:
+at most one instance per marked site is ever pinned.
+
+This module is import-free on purpose (no jax, no numpy): it sits
+below everything in core/ and must never create an import cycle.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, Tuple
+
+#: (module, qualname) -> the most recently constructed marked closure.
+TRACED_REGISTRY: Dict[Tuple[str, str], Callable] = {}
+
+
+def traced_closure(fn: Callable) -> Callable:
+    """Mark ``fn`` as a traced-pure closure (see module docstring).
+
+    Purely declarative: sets ``__traced_closure__`` and records the
+    function in :data:`TRACED_REGISTRY`, then returns ``fn`` unchanged
+    (no wrapper, no call overhead inside the trace).
+    """
+    fn.__traced_closure__ = True
+    TRACED_REGISTRY[(fn.__module__, fn.__qualname__)] = fn
+    return fn
+
+
+def traced_sites() -> Tuple[Tuple[str, str], ...]:
+    """Sorted (module, qualname) keys of every registered marked site
+    (the jaxpr audit and tests enumerate these)."""
+    return tuple(sorted(TRACED_REGISTRY))

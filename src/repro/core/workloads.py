@@ -18,10 +18,13 @@ check in the cost model does the same via ceil(8 / bits_cell).
 from __future__ import annotations
 
 import dataclasses
+import functools
 import itertools
 from typing import Callable, List, NamedTuple, Optional, Sequence, Tuple, Union
 
 import numpy as np
+
+from .tracing import traced_closure
 
 WEIGHT_BITS = 8  # all models quantized to 8-bit weights/activations (§IV)
 
@@ -570,23 +573,46 @@ class WorkloadBuilder:
     def n_workloads(self) -> int:
         return len(self.names)
 
+    @functools.cached_property
+    def _device_tables(self):
+        """Per-slot gather tables converted to device arrays ONCE.
+
+        The converted tables are cached on the instance (cached_property
+        writes straight into ``__dict__``, bypassing the frozen-dataclass
+        ``__setattr__``), so repeated traces of ``__call__`` gather from
+        the same constants instead of re-converting the numpy tables on
+        every trace. The conversion runs under
+        ``ensure_compile_time_eval``: the first access usually happens
+        while ``__call__`` is being traced, and caching trace-local
+        tracers instead of concrete arrays would leak them into every
+        later trace."""
+        import jax
+        import jax.numpy as jnp
+        with jax.ensure_compile_time_eval():
+            return self._convert_tables(jnp)
+
+    def _convert_tables(self, jnp):
+        return tuple(
+            {"layers": jnp.asarray(s.layers), "mask": jnp.asarray(s.mask),
+             "wbits": jnp.asarray(s.wbits), "stored": jnp.asarray(s.stored),
+             "base_acc": jnp.asarray(s.base_acc),
+             "n_layers": jnp.asarray(s.n_layers)}
+            for s in self.slots)
+
+    @traced_closure
     def __call__(self, genomes) -> WorkloadTensors:
         import jax.numpy as jnp
         g = jnp.asarray(genomes)
         per = {f: [] for f in WorkloadTensors._fields}
-        for s in self.slots:
+        for s, tables in zip(self.slots, self._device_tables):
             if s.cols:
                 idx = jnp.zeros(g.shape[:-1], jnp.int32)
                 for c, rad in zip(s.cols, s.radices):
                     idx = idx * rad + g[..., c]
             else:
                 idx = jnp.zeros(g.shape[:-1], jnp.int32)
-            per["layers"].append(jnp.asarray(s.layers)[idx])
-            per["mask"].append(jnp.asarray(s.mask)[idx])
-            per["wbits"].append(jnp.asarray(s.wbits)[idx])
-            per["stored"].append(jnp.asarray(s.stored)[idx])
-            per["base_acc"].append(jnp.asarray(s.base_acc)[idx])
-            per["n_layers"].append(jnp.asarray(s.n_layers)[idx])
+            for field in WorkloadTensors._fields:
+                per[field].append(tables[field][idx])
         ax = g.ndim - 1
         return WorkloadTensors(**{k: jnp.stack(v, axis=ax)
                                   for k, v in per.items()})

@@ -86,6 +86,7 @@ from ..core.objectives import (INFEASIBLE_PENALTY, MultiObjective,
                                per_workload_scores)
 from ..core.scoring import Calib, Scorer, ScorerSpec, build_scorer
 from ..core.pareto import edap_cost_front, hypervolume_2d
+from ..core.tracing import traced_closure
 from ..core.search_space import TECH_NODES_NM, TECH_32NM_INDEX
 from . import report
 from .scenarios import Scenario
@@ -96,13 +97,31 @@ DEFAULT_OUT_DIR = os.path.join("experiments", "results")
 # cache key: bump it whenever the cache-key fields or the result schema
 # change shape, so stale entries invalidate uniformly instead of via
 # per-field ad-hoc checks (the pre-v2 key grew seed -> n_seeds ->
-# budget -> calib -> backend one exception at a time).
-RESULT_SCHEMA_VERSION = 2
+# budget -> calib -> backend one exception at a time). v3 added the
+# nested ``scenario_key`` block: EVERY score-relevant Scenario field is
+# part of the key, and the analysis suite's rule R002 statically checks
+# the key stays complete as Scenario grows new knobs.
+RESULT_SCHEMA_VERSION = 3
+
+# Scenario fields that may change without invalidating a cached result:
+# pure metadata (display/provenance strings) and the CLI's smoke-budget
+# *template* (the budget actually run is always keyed via
+# scenario.budget). Every OTHER Scenario field must be read by
+# ``cache_key_fields`` below — rule R002 (python -m repro.analysis)
+# fails the build when a new field is neither read there nor listed
+# here, which is how the PR 7 "legacy results without the backend key"
+# bug class gets caught at lint time instead of at debug time.
+CACHE_KEY_EXEMPT_FIELDS = frozenset({
+    "name", "paper_ref", "description", "smoke_budget",
+})
 
 
 def cache_key_fields(scenario: Scenario, seed: int,
                      n_seeds: int) -> Dict:
-    """The fields a cached result.json must match to be served."""
+    """The fields a cached result.json must match to be served.
+
+    JSON-stable by construction (lists, not tuples), since the cached
+    side of the comparison round-trips through result.json."""
     return {
         "schema_version": RESULT_SCHEMA_VERSION,
         "seed": seed,
@@ -111,6 +130,19 @@ def cache_key_fields(scenario: Scenario, seed: int,
         "calib": {"n_calib": scenario.n_calib,
                   "calib_k": scenario.calib_k},
         "backend": nonideal.resolve_backend(scenario.backend),
+        "scenario_key": {
+            "mem": scenario.mem,
+            "workloads": list(scenario.workloads),
+            "algorithm": scenario.algorithm,
+            "objective": scenario.objective,
+            "seed": scenario.seed,
+            "seq": scenario.seq,
+            "tech_variable": scenario.tech_variable,
+            "workload_source": scenario.workload_source,
+            "specific_baselines": scenario.specific_baselines,
+            "reduced_space": scenario.reduced_space,
+            "min_accuracy": scenario.min_accuracy,
+        },
     }
 
 
@@ -285,6 +317,7 @@ def make_landscape_scorer(space: SearchSpace, wa: WorkloadArrays,
     (tests/test_baselines.py uses the same construction)."""
     table = jnp.asarray(space.value_table())
 
+    @traced_closure
     def score(genomes):
         m = evaluate_population(space, wa, genomes, constants, table)
         return aggregate_scores(
@@ -300,6 +333,7 @@ def make_infeasibility_penalty(traced: TracedScorer,
     Yao rank by penalty when a comparison is not objective-driven):
     fraction of capacity-infeasible workloads plus relative area
     excess; exactly 0 for feasible designs."""
+    @traced_closure
     def phi(genomes):
         m = traced.metrics(genomes)
         infeas = jnp.mean(1.0 - m.feasible_w.astype(jnp.float32),
@@ -488,6 +522,7 @@ def run_specific_fanout(scenario: Scenario, space: SearchSpace,
     # schedule + active as runtime lane data, matching the campaign
     # engine's specific-lane kernel bit for bit (see
     # genetic.batched_joint_search)
+    @traced_closure
     def one(key, w, sched, active):
         def sc(g):
             return traced.score_w(g, w)
